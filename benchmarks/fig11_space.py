@@ -1,0 +1,21 @@
+"""Fig. 11: bulkload time + memory space per structure."""
+from __future__ import annotations
+
+from .common import STRUCTURES, bulkload, dataset
+
+
+def run(n: int = 20000) -> list:
+    rows = []
+    for name in ("address", "dblp", "url", "wiki"):
+        keys = dataset(name, n)
+        raw = sum(len(k) for k in keys)
+        for s in STRUCTURES:
+            b, t = bulkload(s, keys)
+            sp = b.space_bytes()
+            rows.append({
+                "bench": "fig11", "dataset": name, "structure": s,
+                "bulkload_s": round(t, 3), "raw_mb": round(raw / 2**20, 2),
+                "index_mb": round((sp["total"] - sp["keys"] - sp["entries"]) / 2**20, 2),
+                "total_mb": round(sp["total"] / 2**20, 2),
+            })
+    return rows

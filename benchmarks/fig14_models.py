@@ -1,0 +1,57 @@
+"""Fig. 14: LIT index performance with different learned models.
+
+HPT and SM run the jitted device search (SM == uniform-table HPT); RS and
+SRMI have host-side float64 models, so their LIT variants are measured with
+the host search loop — reported in a separate column, compared against the
+host numbers of HPT/SM for apples-to-apples.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import AlwaysLIT, LITSBuilder, StringSet, uniform_hpt, build_hpt
+from repro.core.baselines import RSModel, SRMIModel
+from repro.core.strings import sort_order
+
+from .common import dataset, device_read_mops
+
+
+def _host_read_kops(b, keys, n_q=1500):
+    rng = np.random.default_rng(2)
+    qs = [keys[i] for i in rng.integers(0, len(keys), n_q)]
+    t0 = time.perf_counter()
+    for q in qs:
+        b.host_search(q)
+    return n_q / (time.perf_counter() - t0) / 1e3
+
+
+def run(n: int = 12000) -> list:
+    rows = []
+    for name in ("reddit", "wiki", "email", "url", "rands"):
+        keys = dataset(name, n)
+        ss = StringSet.from_list(keys)
+        srt = ss.take(sort_order(ss))
+        vals = np.arange(len(keys), dtype=np.int64)
+        variants = {}
+        b_hpt = LITSBuilder(pmss=AlwaysLIT())
+        b_hpt.bulkload(StringSet.from_list(keys), vals)
+        variants["HPT"] = b_hpt
+        b_sm = LITSBuilder(hpt=uniform_hpt(1, 256), pmss=AlwaysLIT())
+        b_sm.bulkload(StringSet.from_list(keys), vals)
+        variants["SM"] = b_sm
+        b_rs = LITSBuilder(host_model=RSModel().fit(srt), pmss=AlwaysLIT())
+        b_rs.bulkload(StringSet.from_list(keys), vals)
+        variants["RS"] = b_rs
+        b_srmi = LITSBuilder(host_model=SRMIModel().fit(srt), pmss=AlwaysLIT())
+        b_srmi.bulkload(StringSet.from_list(keys), vals)
+        variants["SRMI"] = b_srmi
+        row = {"bench": "fig14", "dataset": name}
+        for mname, b in variants.items():
+            row[f"host_kops_{mname}"] = round(_host_read_kops(b, keys), 2)
+            row[f"height_{mname}"] = b.heights()["base"]
+            if mname in ("HPT", "SM"):
+                row[f"dev_mops_{mname}"] = round(device_read_mops(b, keys, 4096, 3), 3)
+        rows.append(row)
+    return rows

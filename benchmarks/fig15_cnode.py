@@ -1,0 +1,38 @@
+"""Fig. 15: compact-node size-limit sweep (none / 8 / 16 / 32): insert + scan."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import AlwaysLIT, LITSBuilder, LITSConfig, StringSet
+
+from .common import dataset, device_read_mops, device_scan_mops, host_insert_kops
+
+
+def run(n: int = 16000) -> list:
+    rows = []
+    for name in ("reddit", "email", "wiki"):
+        keys = dataset(name, n)
+        half = keys[::2]
+        rest = [k for k in keys if k not in set(half)][:1500]
+        for cap in (2, 8, 16, 32):
+            # cap=2 ~ "no compact nodes" (a cnode only ever replaces 2 entries)
+            cfg = LITSConfig(cnode_cap=cap)
+            b = LITSBuilder(config=cfg, pmss=AlwaysLIT())
+            b.bulkload(StringSet.from_list(keys), np.arange(len(keys), dtype=np.int64))
+            b2 = LITSBuilder(config=cfg, pmss=AlwaysLIT())
+            b2.bulkload(StringSet.from_list(half), np.arange(len(half), dtype=np.int64))
+            import time
+
+            t0 = time.perf_counter()
+            for i, k in enumerate(rest):
+                b2.insert(k, i)
+            ins_kops = len(rest) / (time.perf_counter() - t0) / 1e3
+            rows.append({
+                "bench": "fig15", "dataset": name, "cnode_cap": cap,
+                "read_mops": round(device_read_mops(b, keys, 4096, 3), 3),
+                "scan_meps": round(device_scan_mops(b, keys), 3),
+                "insert_kops": round(ins_kops, 2),
+                "height": b.heights()["base"],
+                "space_mb": round(b.space_bytes()["total"] / 2**20, 2),
+            })
+    return rows

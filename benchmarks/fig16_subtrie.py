@@ -1,0 +1,21 @@
+"""Fig. 16: LIT vs LITS (hybrid) vs pure TRIE — read + insert."""
+from __future__ import annotations
+
+from .common import bulkload, dataset, device_read_mops, host_insert_kops
+
+
+def run(n: int = 20000) -> list:
+    rows = []
+    for name in ("reddit", "wiki", "email", "dblp", "url"):
+        keys = dataset(name, n)
+        half = keys[::2]
+        rest = [k for k in keys if k not in set(half)][:1500]
+        row = {"bench": "fig16", "dataset": name}
+        for s in ("LIT", "LITS", "TRIE"):
+            b, _ = bulkload(s, keys)
+            h = b.heights()
+            row[f"read_mops_{s}"] = round(device_read_mops(b, keys), 3)
+            row[f"insert_kops_{s}"] = round(host_insert_kops(s, half, rest), 2)
+            row[f"height_{s}"] = f"{h['base']}+{h['trie']}"
+        rows.append(row)
+    return rows

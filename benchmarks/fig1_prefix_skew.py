@@ -1,0 +1,24 @@
+"""Fig. 1: distinct-prefix ratio per prefix length, per dataset."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import dataset
+
+
+def run(n: int = 20000) -> list:
+    rows = []
+    for name in ("address", "dblp", "geoname", "imdb", "reddit", "url", "wiki",
+                 "email", "idcard", "phone", "rands"):
+        keys = dataset(name, n)
+        N = len(keys)
+        k99 = None
+        for k in (1, 2, 4, 8, 16, 32, 64, 128, 255):
+            ratio = len({key[:k] for key in keys}) / N
+            if ratio > 0.99 and k99 is None:
+                k99 = k
+            rows.append({"bench": "fig1", "dataset": name, "prefix_len": k,
+                         "distinct_ratio": round(ratio, 4)})
+        rows.append({"bench": "fig1", "dataset": name, "prefix_len": "k99",
+                     "distinct_ratio": k99 if k99 is not None else ">255"})
+    return rows

@@ -1,0 +1,70 @@
+"""Fig. 7: offline PMSS benchmark over (gpkl, n) grids -> measured latency
+tables (persisted for the builder's online decisions) + LIT/TRIE heat map."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core import StringSet, pmss as pmss_mod
+from repro.core.gpkl import gpkl
+from repro.core.strings import sort_order
+
+from .common import bulkload, device_read_mops, make_builder
+
+
+def gpkl_direct(rng, n: int, target: float) -> List[bytes]:
+    """Direct construction with gpkl ≈ target: pairs share (target-1)-byte
+    prefixes, suffixes are random (fast replacement for the paper's iterative
+    Fig. 7 procedure; the iterative one lives in data/synthetic.py)."""
+    lower = np.frombuffer(b"abcdefghijklmnopqrstuvwxyz", np.uint8)
+    pl = max(int(round(target)) - 1, 1)
+    out = set()
+    while len(out) < n:
+        p = lower[rng.integers(0, 26, pl)].tobytes()
+        for _ in range(2):
+            out.add(p + lower[rng.integers(0, 26, 6)].tobytes())
+    return sorted(out)[:n]
+
+
+def run(quick: bool = False) -> list:
+    rng = np.random.default_rng(0)
+    gpkls = [3.0, 7.0, 11.0, 15.0, 19.0] if not quick else [3.0, 11.0, 19.0]
+    logns = [8, 10, 12, 14] if not quick else [8, 12]
+    rows = []
+    tables = {
+        "gpkl_grid": gpkls,
+        "logn_grid": [float(x) for x in logns],
+        "lit": {"read": [], "write": []},
+        "trie": {"read": [], "write": []},
+        "source": "fig7-offline-bench",
+    }
+    for g in gpkls:
+        lit_r, lit_w, trie_r, trie_w = [], [], [], []
+        for ln in logns:
+            n = 1 << ln
+            keys = gpkl_direct(rng, n, g)
+            meas = gpkl(StringSet.from_list(keys))
+            half, rest = keys[::2], keys[1::2][: min(1000, n // 2)]
+            for s, rl, wl in (("LIT", lit_r, lit_w), ("TRIE", trie_r, trie_w)):
+                b, _ = bulkload(s, keys)
+                mops = device_read_mops(b, keys, n_queries=4096, reps=3)
+                read_ns = 1e3 / mops
+                b2, _ = bulkload(s, half)
+                t0 = time.perf_counter()
+                for i, k in enumerate(rest):
+                    b2.insert(k, i)
+                write_ns = (time.perf_counter() - t0) / len(rest) * 1e9
+                rl.append(read_ns)
+                wl.append(write_ns)
+                rows.append({"bench": "fig7", "structure": s, "gpkl_target": g,
+                             "gpkl_measured": round(meas, 2), "log2_n": ln,
+                             "read_ns": round(read_ns, 1), "write_ns": round(write_ns, 1)})
+        tables["lit"]["read"].append(lit_r)
+        tables["lit"]["write"].append(lit_w)
+        tables["trie"]["read"].append(trie_r)
+        tables["trie"]["write"].append(trie_w)
+    pmss_mod.save_tables(tables)
+    rows.append({"bench": "fig7", "note": f"tables saved to {pmss_mod._TABLE_PATH}"})
+    return rows

@@ -1,0 +1,23 @@
+"""Fig. 8: read-only (YCSB C) + insert-only throughput, all 11 datasets,
+all structures (device batched reads; host inserts)."""
+from __future__ import annotations
+
+from .common import STRUCTURES, bulkload, dataset, device_read_mops, host_insert_kops
+
+ALL = ("address", "dblp", "geoname", "imdb", "reddit", "url", "wiki",
+       "email", "idcard", "phone", "rands")
+
+
+def run(n: int = 20000, n_insert: int = 2000) -> list:
+    rows = []
+    for name in ALL:
+        keys = dataset(name, n)
+        half = keys[::2]
+        rest = [k for k in keys if k not in set(half)][:n_insert]
+        row = {"bench": "fig8", "dataset": name, "n": len(keys)}
+        for s in STRUCTURES:
+            b, _ = bulkload(s, keys)
+            row[f"read_mops_{s}"] = round(device_read_mops(b, keys), 3)
+            row[f"insert_kops_{s}"] = round(host_insert_kops(s, half, rest), 2)
+        rows.append(row)
+    return rows

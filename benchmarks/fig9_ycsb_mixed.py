@@ -1,0 +1,52 @@
+"""Fig. 9: YCSB A/B/D/E/F + delete-only on the four largest real-like sets.
+
+Mixed workloads run through the host op loop (inserts/updates/deletes mutate
+the structure); read-heavy segments are additionally reported as device
+batched throughput in fig8.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.data import ycsb
+
+from .common import STRUCTURES, bulkload, dataset
+
+
+def _run_ops(b, ops) -> float:
+    t0 = time.perf_counter()
+    for op in ops:
+        if op.kind == "read":
+            b.host_search(op.key)
+        elif op.kind == "update":
+            b.update(op.key, op.value)
+        elif op.kind == "rmw":
+            v = b.get(op.key)
+            if v is not None:
+                b.update(op.key, v + 1)
+        elif op.kind == "insert":
+            b.insert(op.key, op.value)
+        elif op.kind == "scan":
+            b.scan(op.key, op.scan_len)
+        elif op.kind == "delete":
+            b.delete(op.key)
+    return time.perf_counter() - t0
+
+
+def run(n: int = 8000, n_ops: int = 3000) -> list:
+    rows = []
+    for name in ("address", "dblp", "url", "wiki"):
+        keys = dataset(name, n)
+        loaded = keys[: int(len(keys) * 0.8)]
+        new = keys[int(len(keys) * 0.8):]
+        for wl in ("A", "B", "D", "E", "F", "delete-only"):
+            row = {"bench": "fig9", "dataset": name, "workload": wl}
+            for s in STRUCTURES:
+                b, _ = bulkload(s, loaded if wl != "delete-only" else keys)
+                ops = ycsb.generate(wl, list(loaded), list(new), n_ops, seed=7)
+                dt = _run_ops(b, ops)
+                row[f"kops_{s}"] = round(n_ops / dt / 1e3, 2)
+            rows.append(row)
+    return rows

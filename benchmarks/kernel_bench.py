@@ -1,0 +1,62 @@
+"""Kernel microbench: Pallas (interpret) vs jnp reference + analytic roofline.
+
+Interpret-mode wall times are NOT TPU performance — they validate plumbing
+and give the per-call op counts; the §Roofline terms for the kernels are
+analytic (bytes/flops per query from the config).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import StringSet, build_hpt
+from repro.core.hpt import get_cdf_jnp
+from repro.core.strings import random_strings
+from repro.kernels import ops
+
+
+def _time(fn, *args, reps=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run(B: int = 4096, L: int = 32) -> list:
+    rng = np.random.default_rng(0)
+    keys = random_strings(rng, B, 4, L - 2)
+    ss = StringSet.from_list(keys, width=L)
+    hpt = build_hpt(ss, rows=1024, cols=128)
+    cdf_tab, prob_tab = jnp.asarray(hpt.cdf_tab), jnp.asarray(hpt.prob_tab)
+    qb, ql = jnp.asarray(ss.bytes), jnp.asarray(ss.lens)
+    rows = []
+    t_ref = _time(lambda a, b: get_cdf_jnp(cdf_tab, prob_tab, a, b, 0), qb, ql)
+    rows.append({"bench": "kernel", "name": "hpt_cdf_jnp_ref", "B": B, "L": L,
+                 "us_per_call": round(t_ref * 1e6, 1),
+                 "ns_per_query": round(t_ref / B * 1e9, 1)})
+    for variant in ("gather", "onehot"):
+        t = _time(lambda a, b: ops.hpt_cdf(a, b, 0, cdf_tab=cdf_tab,
+                                           prob_tab=prob_tab, variant=variant), qb, ql)
+        rows.append({"bench": "kernel", "name": f"hpt_cdf_pallas_{variant}(interpret)",
+                     "B": B, "L": L, "us_per_call": round(t * 1e6, 1),
+                     "ns_per_query": round(t / B * 1e9, 1)})
+    # analytic per-query TPU cost (v5e): gather variant
+    bytes_q = L * (1 + 4 + 4 + 4)  # char + row gather x2 tables + state
+    flops_q = L * 6
+    rows.append({"bench": "kernel", "name": "hpt_cdf_analytic_v5e",
+                 "vmem_resident_hpt_mb": round(hpt.nbytes() / 2**20, 2),
+                 "bytes_per_query": bytes_q, "flops_per_query": flops_q,
+                 "note": "VMEM-resident tables; VPU-bound, ~L gather-steps/query"})
+    h = jnp.asarray(rng.integers(0, 1 << 16, (B, 16)).astype(np.int32))
+    qh = h[:, 0]
+    cnt = jnp.full((B,), 16, jnp.int32)
+    t = _time(lambda a, b, c: ops.cnode_probe(a, b, c), h, qh, cnt)
+    rows.append({"bench": "kernel", "name": "cnode_probe_pallas(interpret)",
+                 "B": B, "us_per_call": round(t * 1e6, 1)})
+    return rows

@@ -1,0 +1,31 @@
+"""Table 2: GPKL hardness vs LIT/TRIE read & write throughput per dataset."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import StringSet
+from repro.core.gpkl import gpkl, local_gpkl
+from repro.core.strings import sort_order
+
+from .common import bulkload, dataset, device_read_mops, host_insert_kops
+
+
+def run(n: int = 20000, n_insert: int = 2000) -> list:
+    rows = []
+    for name in ("rands", "reddit", "geoname", "imdb", "phone", "address",
+                 "idcard", "wiki", "email", "dblp", "url"):
+        keys = dataset(name, n)
+        ss = StringSet.from_list(keys)
+        srt = ss.take(sort_order(ss))
+        g_global = gpkl(srt)
+        g_local = local_gpkl(srt, g=32)
+        half = keys[::2]
+        rest = [k for k in keys if k not in set(half)][:n_insert]
+        row = {"bench": "table2", "dataset": name,
+               "gpkl_global": round(g_global, 2), "gpkl_local": round(g_local, 2)}
+        for s in ("LIT", "TRIE", "LITS"):
+            b, _ = bulkload(s, keys)
+            row[f"read_mops_{s}"] = round(device_read_mops(b, keys), 3)
+            row[f"write_kops_{s}"] = round(host_insert_kops(s, half, rest), 2)
+        rows.append(row)
+    return rows

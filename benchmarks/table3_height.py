@@ -1,0 +1,18 @@
+"""Table 3: index heights after bulkload (LITS base/trie split vs baselines)."""
+from __future__ import annotations
+
+from .common import bulkload, dataset
+
+
+def run(n: int = 20000) -> list:
+    rows = []
+    for name in ("address", "dblp", "url", "wiki"):
+        keys = dataset(name, n)
+        row = {"bench": "table3", "dataset": name}
+        for s in ("LITS", "LIT", "TRIE", "SLIPP"):
+            b, _ = bulkload(s, keys)
+            h = b.heights()
+            row[f"{s}_base"] = h["base"]
+            row[f"{s}_trie"] = h["trie"]
+        rows.append(row)
+    return rows

@@ -1,0 +1,48 @@
+"""YCSB workloads against LITS vs baselines (paper Sec. 4.2, scaled down).
+
+    PYTHONPATH=src python examples/ycsb_demo.py [--n 8000] [--ops 3000]
+"""
+import argparse
+import time
+
+from benchmarks.common import STRUCTURES, bulkload, dataset, device_read_mops
+from repro.data import ycsb
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=8000)
+    ap.add_argument("--ops", type=int, default=3000)
+    ap.add_argument("--dataset", default="reddit")
+    args = ap.parse_args()
+    keys = dataset(args.dataset, args.n)
+    loaded, new = keys[::2], keys[1::2]
+    print(f"dataset={args.dataset} n={len(keys)}")
+    print(f"{'workload':<12}" + "".join(f"{s:>12}" for s in STRUCTURES) + "  (kops, host)")
+    for wl in ("A", "B", "C", "D", "F", "insert-only"):
+        line = f"{wl:<12}"
+        for s in STRUCTURES:
+            b, _ = bulkload(s, loaded)
+            ops = ycsb.generate(wl, list(loaded), list(new), args.ops, seed=1)
+            t0 = time.perf_counter()
+            for op in ops:
+                if op.kind == "read":
+                    b.host_search(op.key)
+                elif op.kind == "update":
+                    b.update(op.key, op.value)
+                elif op.kind == "insert":
+                    b.insert(op.key, op.value)
+                elif op.kind == "rmw":
+                    v = b.get(op.key)
+                    if v is not None:
+                        b.update(op.key, v + 1)
+            line += f"{args.ops / (time.perf_counter() - t0) / 1e3:>12.1f}"
+        print(line)
+    print("\nbatched device read throughput (YCSB C, jitted):")
+    for s in STRUCTURES:
+        b, _ = bulkload(s, keys)
+        print(f"  {s:<8} {device_read_mops(b, keys):.3f} Mops")
+
+
+if __name__ == "__main__":
+    main()

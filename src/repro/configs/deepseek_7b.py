@@ -1,0 +1,18 @@
+"""deepseek-7b [dense] — llama arch, MHA-equal GQA (kv=32).  [arXiv:2401.02954; hf]
+
+30L d_model=4096 32H (GQA kv=32) d_ff=11008 vocab=102400.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-7b",
+    family="dense",
+    n_layers=30,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=11008,
+    vocab=102400,
+    mlp_act="swiglu",
+    notes="llama-arch dense (DeepSeek LLM 7B)",
+)

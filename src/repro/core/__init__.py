@@ -1,0 +1,26 @@
+"""LITS core — the paper's contribution as a composable JAX module."""
+from .builder import LITSBuilder, LITSConfig, TAG_CNODE, TAG_EMPTY, TAG_ENTRY, TAG_MNODE, TAG_TRIE
+from .gpkl import gpkl, local_gpkl, pkl
+from .hpt import HPT, build_hpt, get_cdf_jnp, get_cdf_np64, positions_jnp, uniform_hpt
+from .pmss import PMSS, AlwaysLIT, AlwaysTrie
+from .strings import StringSet, sort_order
+from .tensor_index import (
+    TensorIndex,
+    freeze,
+    insert_batch,
+    lookup_values,
+    merge_delta,
+    pad_queries,
+    rank_batch,
+    scan_batch,
+    search_batch,
+)
+
+__all__ = [
+    "LITSBuilder", "LITSConfig", "HPT", "build_hpt", "uniform_hpt",
+    "get_cdf_jnp", "get_cdf_np64", "positions_jnp", "gpkl", "local_gpkl", "pkl",
+    "PMSS", "AlwaysLIT", "AlwaysTrie", "StringSet", "sort_order",
+    "TensorIndex", "freeze", "search_batch", "insert_batch", "lookup_values",
+    "merge_delta", "pad_queries", "rank_batch", "scan_batch",
+    "TAG_EMPTY", "TAG_ENTRY", "TAG_MNODE", "TAG_CNODE", "TAG_TRIE",
+]

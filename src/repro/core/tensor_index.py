@@ -1,0 +1,566 @@
+"""Device-resident LITS: frozen SoA pools + jitted batched operations.
+
+``freeze`` exports a :class:`TensorIndex` (a registered-dataclass pytree of
+flat jax arrays) from a host :class:`~repro.core.builder.LITSBuilder`.  All
+query-side operations are single jitted functions, composable under
+``vmap``/``pjit``/``shard_map``:
+
+* :func:`search_batch`   — paper Alg. 2, level-synchronous batched traversal
+* :func:`rank_batch`     — ordered rank for range scans (binary search)
+* :func:`scan_batch`     — range scan windows over the frozen sort order
+* :func:`insert_batch`   — log-structured delta-buffer inserts (DESIGN.md §2)
+* :func:`lookup_values`  — (lo, hi) 2×int32 value fetch
+
+The traversal mirrors the host builder bit-for-bit: slot positions come from
+the same float32 ``positions_impl`` the builder used at build time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .builder import (
+    LITSBuilder,
+    TAG_CNODE,
+    TAG_EMPTY,
+    TAG_ENTRY,
+    TAG_MNODE,
+    TAG_TRIE,
+    PAYLOAD_BITS,
+    PAYLOAD_MASK,
+)
+from .hpt import FNV_PRIME, MAX_CDF_STEPS, get_cdf_impl, positions_impl
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=[
+        "items", "mn_slot_base", "mn_slot_cnt", "mn_prefix_off", "mn_prefix_len",
+        "mn_alpha", "mn_beta", "cn_base", "cn_cnt", "ch_hash", "ch_ent",
+        "tr_byte", "tr_mask", "tr_left", "tr_right",
+        "key_bytes", "ent_off", "ent_len", "ent_val_lo", "ent_val_hi",
+        "ent_sorted", "cdf_tab", "prob_tab", "root_item",
+        "db_bytes", "db_used", "de_off", "de_len", "de_val_lo", "de_val_hi",
+        "de_hash", "de_count", "dh_slot", "delta_overflow",
+    ],
+    meta_fields=["width", "max_iters", "cnode_cap", "rank_iters", "delta_probes",
+                 "cdf_steps"],
+)
+@dataclasses.dataclass
+class TensorIndex:
+    # base structure
+    items: jax.Array
+    mn_slot_base: jax.Array
+    mn_slot_cnt: jax.Array
+    mn_prefix_off: jax.Array
+    mn_prefix_len: jax.Array
+    mn_alpha: jax.Array
+    mn_beta: jax.Array
+    cn_base: jax.Array
+    cn_cnt: jax.Array
+    ch_hash: jax.Array
+    ch_ent: jax.Array
+    tr_byte: jax.Array
+    tr_mask: jax.Array
+    tr_left: jax.Array
+    tr_right: jax.Array
+    key_bytes: jax.Array
+    ent_off: jax.Array
+    ent_len: jax.Array
+    ent_val_lo: jax.Array
+    ent_val_hi: jax.Array
+    ent_sorted: jax.Array
+    cdf_tab: jax.Array
+    prob_tab: jax.Array
+    root_item: jax.Array
+    # delta buffer (log-structured device inserts)
+    db_bytes: jax.Array
+    db_used: jax.Array
+    de_off: jax.Array
+    de_len: jax.Array
+    de_val_lo: jax.Array
+    de_val_hi: jax.Array
+    de_hash: jax.Array
+    de_count: jax.Array
+    dh_slot: jax.Array
+    delta_overflow: jax.Array
+    # static metadata
+    width: int
+    max_iters: int
+    cnode_cap: int
+    rank_iters: int
+    delta_probes: int
+    cdf_steps: int
+
+    @property
+    def n_entries(self) -> int:
+        return self.ent_off.shape[0]
+
+    def nbytes(self) -> int:
+        return sum(
+            x.size * x.dtype.itemsize
+            for x in jax.tree_util.tree_leaves(self)
+            if hasattr(x, "dtype")
+        )
+
+
+# ---------------------------------------------------------------------------
+# freeze
+# ---------------------------------------------------------------------------
+
+def _nz(a: np.ndarray, dtype) -> jnp.ndarray:
+    """Pool view as a device array, padded to at least one element."""
+    a = np.asarray(a, dtype=dtype)
+    if a.shape[0] == 0:
+        a = np.zeros(1, dtype=dtype)
+    return jnp.asarray(a)
+
+
+def freeze(
+    b: LITSBuilder,
+    delta_capacity: int = 4096,
+    delta_bytes: int | None = None,
+    delta_probes: int = 16,
+) -> TensorIndex:
+    heights = b.heights()
+    max_iters = int(heights["base"] + heights["trie"] + 4)
+    n = max(b.ent_off.n, 1)
+    rank_iters = int(math.ceil(math.log2(n))) + 2
+    ent_sorted = np.fromiter(b.iter_subtree(b.root_item), dtype=np.int32, count=-1)
+    if ent_sorted.size == 0:
+        ent_sorted = np.zeros(1, np.int32)
+    key_pool = np.concatenate([b.key_bytes.view(), np.zeros(b.width + 1, np.uint8)])
+    dcap = max(delta_capacity, 8)
+    hcap = 1 << int(math.ceil(math.log2(dcap * 2)))
+    dbcap = delta_bytes if delta_bytes is not None else dcap * max(b.width, 16) + b.width
+    return TensorIndex(
+        items=_nz(b.items.view(), np.int32),
+        mn_slot_base=_nz(b.mn_slot_base.view(), np.int32),
+        mn_slot_cnt=_nz(b.mn_slot_cnt.view(), np.int32),
+        mn_prefix_off=_nz(b.mn_prefix_off.view(), np.int32),
+        mn_prefix_len=_nz(b.mn_prefix_len.view(), np.int32),
+        mn_alpha=_nz(b.mn_alpha.view(), np.float32),
+        mn_beta=_nz(b.mn_beta.view(), np.float32),
+        cn_base=_nz(b.cn_base.view(), np.int32),
+        cn_cnt=_nz(b.cn_cnt.view(), np.int32),
+        ch_hash=_nz(b.ch_hash.view().astype(np.int32), np.int32),
+        ch_ent=_nz(b.ch_ent.view(), np.int32),
+        tr_byte=_nz(b.tr_byte.view(), np.int32),
+        tr_mask=_nz(b.tr_mask.view().astype(np.int32), np.int32),
+        tr_left=_nz(b.tr_left.view(), np.int32),
+        tr_right=_nz(b.tr_right.view(), np.int32),
+        key_bytes=jnp.asarray(key_pool),
+        ent_off=_nz(b.ent_off.view().astype(np.int32), np.int32),
+        ent_len=_nz(b.ent_len.view(), np.int32),
+        ent_val_lo=_nz((b.ent_val.view() & 0xFFFFFFFF).astype(np.uint32).view(np.int32), np.int32),
+        ent_val_hi=_nz((b.ent_val.view() >> 32).astype(np.int32), np.int32),
+        ent_sorted=jnp.asarray(ent_sorted),
+        cdf_tab=jnp.asarray(b.hpt.cdf_tab if b.hpt is not None else np.zeros((1, 128), np.float32)),
+        prob_tab=jnp.asarray(b.hpt.prob_tab if b.hpt is not None else np.full((1, 128), 1 / 128, np.float32)),
+        root_item=jnp.asarray(np.int32(b.root_item)),
+        db_bytes=jnp.zeros(dbcap, jnp.uint8),
+        db_used=jnp.asarray(np.int32(0)),
+        de_off=jnp.zeros(dcap, jnp.int32),
+        de_len=jnp.zeros(dcap, jnp.int32),
+        de_val_lo=jnp.zeros(dcap, jnp.int32),
+        de_val_hi=jnp.zeros(dcap, jnp.int32),
+        de_hash=jnp.zeros(dcap, jnp.uint32),
+        de_count=jnp.asarray(np.int32(0)),
+        dh_slot=jnp.full(hcap, -1, jnp.int32),
+        delta_overflow=jnp.asarray(False),
+        width=int(b.width),
+        max_iters=max_iters,
+        cnode_cap=int(b.cfg.cnode_cap),
+        rank_iters=rank_iters,
+        delta_probes=delta_probes,
+        cdf_steps=int(min(max(getattr(b, 'max_suffix_len', b.width), 1), MAX_CDF_STEPS)),
+    )
+
+
+def pad_queries(keys, width: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Host helper: list[bytes] -> zero-padded (B, width) uint8 + true lens (clipped to width+1)."""
+    B = len(keys)
+    qb = np.zeros((B, width), np.uint8)
+    ql = np.zeros(B, np.int32)
+    for i, k in enumerate(keys):
+        kb = np.frombuffer(k[:width], np.uint8)
+        qb[i, : kb.shape[0]] = kb
+        ql[i] = min(len(k), width + 1)
+    return qb, ql
+
+
+# ---------------------------------------------------------------------------
+# device string primitives
+# ---------------------------------------------------------------------------
+
+def _gather_bytes(pool: jax.Array, off: jax.Array, width: int) -> jax.Array:
+    idx = off[:, None] + jnp.arange(width, dtype=jnp.int32)[None, :]
+    return jnp.take(pool, idx, mode="clip")
+
+
+def _str_eq(qbytes, qlens, pool, off, klen) -> jax.Array:
+    W = qbytes.shape[1]
+    kb = _gather_bytes(pool, off, W)
+    mask = jnp.arange(W)[None, :] < klen[:, None]
+    kb = jnp.where(mask, kb, 0)
+    return jnp.all(kb == qbytes, axis=1) & (qlens == klen)
+
+
+def _str_cmp_prefix(qbytes, pool, off, pl) -> jax.Array:
+    """sign(strncmp(q, pool[off:], pl)) vectorized; q zero-padded."""
+    W = qbytes.shape[1]
+    kb = _gather_bytes(pool, off, W)
+    mask = jnp.arange(W)[None, :] < pl[:, None]
+    kv = jnp.where(mask, kb, 0).astype(jnp.int32)
+    qv = jnp.where(mask, qbytes, 0).astype(jnp.int32)
+    neq = kv != qv
+    any_neq = neq.any(axis=1)
+    first = jnp.argmax(neq, axis=1)
+    qd = jnp.take_along_axis(qv, first[:, None], axis=1)[:, 0]
+    kd = jnp.take_along_axis(kv, first[:, None], axis=1)[:, 0]
+    return jnp.sign(qd - kd) * any_neq
+
+
+def _str_cmp_full(qbytes, qlens, pool, off, klen) -> jax.Array:
+    """Full strcmp sign; equal padded bytes resolve by length."""
+    W = qbytes.shape[1]
+    kb = _gather_bytes(pool, off, W)
+    mask = jnp.arange(W)[None, :] < klen[:, None]
+    kv = jnp.where(mask, kb, 0).astype(jnp.int32)
+    qv = qbytes.astype(jnp.int32)
+    neq = kv != qv
+    any_neq = neq.any(axis=1)
+    first = jnp.argmax(neq, axis=1)
+    qd = jnp.take_along_axis(qv, first[:, None], axis=1)[:, 0]
+    kd = jnp.take_along_axis(kv, first[:, None], axis=1)[:, 0]
+    bytecmp = jnp.sign(qd - kd) * any_neq
+    lencmp = jnp.sign(qlens - klen)
+    return jnp.where(any_neq, bytecmp, lencmp)
+
+
+def _hash16(qbytes, qlens) -> jax.Array:
+    """Device mirror of strings.key_hash16 (bit-identical)."""
+    B, W = qbytes.shape
+    h = jnp.full((B,), 0x811C9DC5, jnp.uint32)
+
+    def body(k, h):
+        active = qlens > k
+        c = qbytes[:, k].astype(jnp.uint32)
+        nh = (h ^ c) * FNV_PRIME
+        return jnp.where(active, nh, h)
+
+    h = jax.lax.fori_loop(0, W, body, h)
+    return ((h ^ (h >> jnp.uint32(16))) & jnp.uint32(0xFFFF)).astype(jnp.int32)
+
+
+def _hash32(qbytes, qlens) -> jax.Array:
+    B, W = qbytes.shape
+    h = jnp.full((B,), 0x811C9DC5, jnp.uint32)
+
+    def body(k, h):
+        active = qlens > k
+        c = qbytes[:, k].astype(jnp.uint32)
+        nh = (h ^ c) * FNV_PRIME
+        return jnp.where(active, nh, h)
+
+    return jax.lax.fori_loop(0, W, body, h)
+
+
+def _tag(item: jax.Array) -> jax.Array:
+    return jax.lax.shift_right_logical(item, PAYLOAD_BITS) & 0x7
+
+
+def _payload(item: jax.Array) -> jax.Array:
+    return item & PAYLOAD_MASK
+
+
+# ---------------------------------------------------------------------------
+# search
+# ---------------------------------------------------------------------------
+
+def _traverse(ti: TensorIndex, qbytes: jax.Array, qlens: jax.Array) -> jax.Array:
+    """Run the tagged-handle walk until every query sits on a terminal item."""
+    B = qbytes.shape[0]
+    item0 = jnp.broadcast_to(ti.root_item, (B,)).astype(jnp.int32)
+
+    def cond(state):
+        i, item = state
+        tag = _tag(item)
+        return (i < ti.max_iters) & jnp.any((tag == TAG_MNODE) | (tag == TAG_TRIE))
+
+    def body(state):
+        i, item = state
+        tag = _tag(item)
+        pay = _payload(item)
+        # ---- model-based node step (paper Alg. 2 `locate`) ----
+        nid = jnp.minimum(pay, ti.mn_slot_base.shape[0] - 1)
+        pl = jnp.take(ti.mn_prefix_len, nid)
+        poff = jnp.take(ti.mn_prefix_off, nid)
+        m = jnp.take(ti.mn_slot_cnt, nid)
+        base = jnp.take(ti.mn_slot_base, nid)
+        cmp = _str_cmp_prefix(qbytes, ti.key_bytes, poff, pl)
+        pos = positions_impl(
+            ti.cdf_tab, ti.prob_tab, qbytes, qlens, pl,
+            jnp.take(ti.mn_alpha, nid), jnp.take(ti.mn_beta, nid), m,
+            max_steps=ti.cdf_steps,  # §Perf H3: walk only as far as the
+        )                            # longest mnode suffix actually stored
+        pos = jnp.where(cmp < 0, 0, jnp.where(cmp > 0, m - 1, pos))
+        mnext = jnp.take(ti.items, jnp.minimum(base + pos, ti.items.shape[0] - 1))
+        # ---- critbit subtrie step ----
+        tid = jnp.minimum(pay, ti.tr_byte.shape[0] - 1)
+        cb = jnp.take(ti.tr_byte, tid)
+        mk = jnp.take(ti.tr_mask, tid)
+        qc = jnp.take_along_axis(qbytes, jnp.minimum(cb, ti.width - 1)[:, None], axis=1)[:, 0]
+        qc = jnp.where(cb < jnp.minimum(qlens, ti.width), qc.astype(jnp.int32), 0)
+        bit = (qc & mk) != 0
+        tnext = jnp.where(bit, jnp.take(ti.tr_right, tid), jnp.take(ti.tr_left, tid))
+        item = jnp.where(tag == TAG_MNODE, mnext, jnp.where(tag == TAG_TRIE, tnext, item))
+        return i + 1, item
+
+    _, item = jax.lax.while_loop(cond, body, (jnp.int32(0), item0))
+    return item
+
+
+def _resolve_terminal(ti: TensorIndex, qbytes, qlens, item):
+    """EMPTY/ENTRY/CNODE -> (found, eid)."""
+    tag = _tag(item)
+    pay = _payload(item)
+    # ENTRY
+    eid = jnp.minimum(pay, ti.ent_off.shape[0] - 1)
+    ent_ok = (tag == TAG_ENTRY) & _str_eq(
+        qbytes, qlens, ti.key_bytes, jnp.take(ti.ent_off, eid), jnp.take(ti.ent_len, eid)
+    )
+    # CNODE: scan up to cnode_cap h-pointers, dereference on 16-bit hash match
+    cid = jnp.minimum(pay, ti.cn_base.shape[0] - 1)
+    base = jnp.take(ti.cn_base, cid)
+    cnt = jnp.take(ti.cn_cnt, cid)
+    qh = _hash16(qbytes, qlens)
+
+    def cbody(j, carry):
+        found, feid = carry
+        sidx = jnp.minimum(base + j, ti.ch_hash.shape[0] - 1)
+        h = jnp.take(ti.ch_hash, sidx)
+        cand = jnp.take(ti.ch_ent, sidx)
+        ce = jnp.minimum(cand, ti.ent_off.shape[0] - 1)
+        hmatch = (j < cnt) & (h == qh) & (tag == TAG_CNODE)
+        eq = hmatch & _str_eq(
+            qbytes, qlens, ti.key_bytes, jnp.take(ti.ent_off, ce), jnp.take(ti.ent_len, ce)
+        )
+        take = eq & ~found
+        return found | eq, jnp.where(take, cand, feid)
+
+    cfound, ceid = jax.lax.fori_loop(
+        0, ti.cnode_cap, cbody, (jnp.zeros(qbytes.shape[0], bool), jnp.zeros(qbytes.shape[0], jnp.int32))
+    )
+    found = ent_ok | cfound
+    out_eid = jnp.where(ent_ok, eid, jnp.where(cfound, ceid, -1))
+    return found, out_eid
+
+
+def _delta_lookup(ti: TensorIndex, qbytes, qlens):
+    """Probe the delta buffer: (found, delta_entry_id)."""
+    B = qbytes.shape[0]
+    qh = _hash32(qbytes, qlens)
+    hcap = ti.dh_slot.shape[0]
+
+    def body(p, carry):
+        found, did = carry
+        slot = ((qh + p.astype(jnp.uint32)) & jnp.uint32(hcap - 1)).astype(jnp.int32)
+        de = jnp.take(ti.dh_slot, slot)
+        valid = de >= 0
+        dei = jnp.maximum(de, 0)
+        hm = valid & (jnp.take(ti.de_hash, dei) == qh)
+        eq = hm & _str_eq(
+            qbytes, qlens, ti.db_bytes, jnp.take(ti.de_off, dei), jnp.take(ti.de_len, dei)
+        )
+        take = eq & ~found
+        return found | eq, jnp.where(take, de, did)
+
+    return jax.lax.fori_loop(
+        0, ti.delta_probes, body, (jnp.zeros(B, bool), jnp.full(B, -1, jnp.int32))
+    )
+
+
+@jax.jit
+def search_batch(ti: TensorIndex, qbytes: jax.Array, qlens: jax.Array):
+    """Batched point lookup. Returns (found, eid, is_delta)."""
+    dfound, did = _delta_lookup(ti, qbytes, qlens)
+    item = _traverse(ti, qbytes, qlens)
+    bfound, beid = _resolve_terminal(ti, qbytes, qlens, item)
+    found = dfound | bfound
+    eid = jnp.where(dfound, did, beid)
+    return found, eid, dfound
+
+
+@jax.jit
+def lookup_values(ti: TensorIndex, eid: jax.Array, is_delta: jax.Array):
+    e = jnp.maximum(eid, 0)
+    base_lo = jnp.take(ti.ent_val_lo, jnp.minimum(e, ti.ent_val_lo.shape[0] - 1))
+    base_hi = jnp.take(ti.ent_val_hi, jnp.minimum(e, ti.ent_val_hi.shape[0] - 1))
+    d_lo = jnp.take(ti.de_val_lo, jnp.minimum(e, ti.de_val_lo.shape[0] - 1))
+    d_hi = jnp.take(ti.de_val_hi, jnp.minimum(e, ti.de_val_hi.shape[0] - 1))
+    return (
+        jnp.where(is_delta, d_lo, base_lo),
+        jnp.where(is_delta, d_hi, base_hi),
+    )
+
+
+# ---------------------------------------------------------------------------
+# ordered rank + scan (over the frozen sorted entry order)
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def rank_batch(ti: TensorIndex, qbytes: jax.Array, qlens: jax.Array) -> jax.Array:
+    """First rank r such that key(ent_sorted[r]) >= query (binary search)."""
+    B = qbytes.shape[0]
+    n = ti.ent_sorted.shape[0]
+    lo = jnp.zeros(B, jnp.int32)
+    hi = jnp.full(B, n, jnp.int32)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = (lo + hi) // 2
+        e = jnp.take(ti.ent_sorted, jnp.minimum(mid, n - 1))
+        cmp = _str_cmp_full(
+            qbytes, qlens, ti.key_bytes, jnp.take(ti.ent_off, e), jnp.take(ti.ent_len, e)
+        )
+        go_right = (cmp > 0) & (lo < hi)
+        nlo = jnp.where(go_right, mid + 1, lo)
+        nhi = jnp.where(go_right | (lo >= hi), hi, mid)
+        return nlo, nhi
+
+    lo, _ = jax.lax.fori_loop(0, ti.rank_iters, body, (lo, hi))
+    return lo
+
+
+@partial(jax.jit, static_argnames=("window",))
+def scan_batch(ti: TensorIndex, qbytes: jax.Array, qlens: jax.Array, window: int = 16):
+    """Range scan: entry ids of the next ``window`` keys >= query, plus validity mask.
+
+    Scans read the frozen snapshot order; delta-buffer keys become visible
+    after the next merge (epoch semantics, DESIGN.md §2).
+    """
+    r = rank_batch(ti, qbytes, qlens)
+    n = ti.ent_sorted.shape[0]
+    idx = r[:, None] + jnp.arange(window, dtype=jnp.int32)[None, :]
+    valid = idx < n
+    eids = jnp.take(ti.ent_sorted, jnp.minimum(idx, n - 1))
+    return jnp.where(valid, eids, -1), valid
+
+
+# ---------------------------------------------------------------------------
+# delta-buffer inserts (log-structured; host merge = minor compaction)
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def insert_batch(ti: TensorIndex, kbytes: jax.Array, klens: jax.Array,
+                 val_lo: jax.Array, val_hi: jax.Array):
+    """Functional batched insert.
+
+    Keys already in the base index get a value update; new keys go to the
+    delta buffer.  Returns (new_ti, inserted_mask, updated_mask).
+    """
+    B, W = kbytes.shape
+    item = _traverse(ti, kbytes, klens)
+    bfound, beid = _resolve_terminal(ti, kbytes, klens, item)
+    # update base values in-place (functional)
+    upd_idx = jnp.where(bfound, beid, 0)
+    ent_val_lo = ti.ent_val_lo.at[upd_idx].set(
+        jnp.where(bfound, val_lo, jnp.take(ti.ent_val_lo, upd_idx)), mode="drop"
+    )
+    ent_val_hi = ti.ent_val_hi.at[upd_idx].set(
+        jnp.where(bfound, val_hi, jnp.take(ti.ent_val_hi, upd_idx)), mode="drop"
+    )
+    qh = _hash32(kbytes, klens)
+    hcap = ti.dh_slot.shape[0]
+    dcap = ti.de_off.shape[0]
+    dbcap = ti.db_bytes.shape[0]
+
+    def step(carry, x):
+        (dh_slot, db_bytes, db_used, de_off, de_len, de_vlo, de_vhi, de_hash,
+         de_count, overflow) = carry
+        kb, kl, vlo, vhi, h, in_base = x
+        # probe for existing delta entry or first free slot
+        def probe(p, pc):
+            fslot, match_de, done = pc
+            slot = ((h + p.astype(jnp.uint32)) & jnp.uint32(hcap - 1)).astype(jnp.int32)
+            de = jnp.take(dh_slot, slot)
+            free = de < 0
+            dei = jnp.maximum(de, 0)
+            key_eq = (~free) & (jnp.take(de_hash, dei) == h)
+            kb2 = jax.lax.dynamic_slice(db_bytes, (jnp.take(de_off, dei),), (W,))
+            klen2 = jnp.take(de_len, dei)
+            mask = jnp.arange(W) < klen2
+            key_eq = key_eq & jnp.all(jnp.where(mask, kb2, 0) == kb) & (klen2 == kl)
+            new_fslot = jnp.where((fslot < 0) & free, slot, fslot)
+            new_match = jnp.where(key_eq & ~done, de, match_de)
+            return new_fslot, new_match, done | free | key_eq
+        fslot, match_de, _ = jax.lax.fori_loop(
+            0, ti.delta_probes, probe, (jnp.int32(-1), jnp.int32(-1), jnp.asarray(False))
+        )
+        is_update_delta = match_de >= 0
+        mde = jnp.maximum(match_de, 0)
+        de_vlo = de_vlo.at[mde].set(jnp.where(is_update_delta, vlo, jnp.take(de_vlo, mde)))
+        de_vhi = de_vhi.at[mde].set(jnp.where(is_update_delta, vhi, jnp.take(de_vhi, mde)))
+        can = (~in_base) & (~is_update_delta) & (fslot >= 0) \
+            & (de_count < dcap) & (db_used + W <= dbcap)
+        this_overflow = (~in_base) & (~is_update_delta) & ~can
+        # claim
+        did = jnp.where(can, de_count, 0)
+        dh_slot = dh_slot.at[jnp.where(can, fslot, hcap)].set(did, mode="drop")
+        woff = jnp.where(can, db_used, 0)
+        patch = jax.lax.dynamic_slice(db_bytes, (woff,), (W,))
+        patch = jnp.where(can, kb, patch)
+        db_bytes = jax.lax.dynamic_update_slice(db_bytes, patch, (woff,))
+        de_off = de_off.at[did].set(jnp.where(can, woff, jnp.take(de_off, did)))
+        de_len = de_len.at[did].set(jnp.where(can, kl, jnp.take(de_len, did)))
+        de_vlo = de_vlo.at[did].set(jnp.where(can, vlo, jnp.take(de_vlo, did)))
+        de_vhi = de_vhi.at[did].set(jnp.where(can, vhi, jnp.take(de_vhi, did)))
+        de_hash = de_hash.at[did].set(jnp.where(can, h, jnp.take(de_hash, did)))
+        db_used = jnp.where(can, db_used + kl, db_used)
+        de_count = jnp.where(can, de_count + 1, de_count)
+        ncarry = (dh_slot, db_bytes, db_used, de_off, de_len, de_vlo, de_vhi,
+                  de_hash, de_count, overflow | this_overflow)
+        return ncarry, (can, is_update_delta | in_base)
+
+    carry0 = (ti.dh_slot, ti.db_bytes, ti.db_used, ti.de_off, ti.de_len,
+              ti.de_val_lo, ti.de_val_hi, ti.de_hash, ti.de_count, ti.delta_overflow)
+    carry, (ins, upd) = jax.lax.scan(step, carry0, (kbytes, klens, val_lo, val_hi, qh, bfound))
+    (dh_slot, db_bytes, db_used, de_off, de_len, de_vlo, de_vhi, de_hash,
+     de_count, overflow) = carry
+    nti = dataclasses.replace(
+        ti, ent_val_lo=ent_val_lo, ent_val_hi=ent_val_hi, dh_slot=dh_slot,
+        db_bytes=db_bytes, db_used=db_used, de_off=de_off, de_len=de_len,
+        de_val_lo=de_vlo, de_val_hi=de_vhi, de_hash=de_hash, de_count=de_count,
+        delta_overflow=overflow,
+    )
+    return nti, ins, upd
+
+
+def delta_fill_fraction(ti: TensorIndex) -> float:
+    return float(jax.device_get(ti.de_count)) / ti.de_off.shape[0]
+
+
+def merge_delta(builder: LITSBuilder, ti: TensorIndex) -> TensorIndex:
+    """Minor compaction: replay delta inserts into the host builder, re-freeze."""
+    cnt = int(jax.device_get(ti.de_count))
+    if cnt:
+        db = np.asarray(jax.device_get(ti.db_bytes))
+        offs = np.asarray(jax.device_get(ti.de_off))[:cnt]
+        lens = np.asarray(jax.device_get(ti.de_len))[:cnt]
+        vlo = np.asarray(jax.device_get(ti.de_val_lo))[:cnt].view(np.uint32).astype(np.int64)
+        vhi = np.asarray(jax.device_get(ti.de_val_hi))[:cnt].astype(np.int64)
+        for i in range(cnt):
+            key = db[offs[i] : offs[i] + lens[i]].tobytes()
+            val = int((vhi[i] << 32) | vlo[i])
+            if not builder.insert(key, val):
+                builder.update(key, val)
+    new_ti = freeze(builder, delta_capacity=ti.de_off.shape[0],
+                    delta_bytes=ti.db_bytes.shape[0], delta_probes=ti.delta_probes)
+    return new_ti

@@ -1,0 +1,2 @@
+"""Data substrate: deterministic token pipeline, synthetic string data sets,
+YCSB workloads, LITS-backed record store."""

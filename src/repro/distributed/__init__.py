@@ -1,0 +1,4 @@
+"""Distribution substrate: mesh rules, sharding helpers, collectives, compression."""
+from .sharding import MeshRules, constrain, get_mesh, rules, set_mesh, spec
+
+__all__ = ["MeshRules", "constrain", "get_mesh", "rules", "set_mesh", "spec"]

@@ -1,0 +1,195 @@
+"""Distributed LITS query service: CDF range partition + all_to_all routing.
+
+The paper's own global model is the partition function: ``GetCDF`` is monotone
+non-decreasing w.r.t. lexicographic order (tested property, DESIGN.md §5), so
+CDF boundary values define a correct range partition of the key space.  Each
+shard holds an independent LITS over its key range; all shards' pools are
+padded to a common size and stacked with a leading shard axis, so the whole
+service is one pytree sharded over the ``data`` mesh axis.
+
+Query path (one ``shard_map`` program, this is the collective pattern a
+1000-node deployment runs):
+
+  1. every device computes GetCDF of its resident queries (HPT replicated),
+  2. bucketizes against the global boundaries -> owner shard,
+  3. ``all_to_all`` scatters queries to owners (fixed per-destination
+     capacity, overflow reported),
+  4. owners run the local jitted LITS search,
+  5. ``all_to_all`` returns (found, value) results to the askers.
+
+Float ties at a boundary are covered by an ε-margin recheck: a not-found
+whose CDF lies within ε of the boundary is retried on the neighbour shard
+(second pass), preserving exactness.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import LITSBuilder, StringSet, freeze, search_batch, lookup_values
+from repro.core.hpt import get_cdf_impl
+from repro.core.tensor_index import _resolve_terminal, _traverse
+from repro.core.strings import sort_order
+from repro.core.tensor_index import TensorIndex
+
+BOUNDARY_EPS = 1e-6
+
+
+@dataclasses.dataclass
+class ShardedIndex:
+    stacked: TensorIndex          # every leaf has a leading [n_shards] dim
+    boundaries: np.ndarray        # (n_shards-1,) f32 CDF split points
+    n_shards: int
+    width: int
+
+
+def build_sharded(keys: List[bytes], values: np.ndarray, n_shards: int,
+                  **builder_kw) -> ShardedIndex:
+    ss = StringSet.from_list(keys)
+    order = sort_order(ss)
+    ss = ss.take(order)
+    values = np.asarray(values)[order]
+    # one global HPT (trained on everything) shared by all shards = the router
+    probe = LITSBuilder(**builder_kw)
+    probe.bulkload(StringSet(ss.bytes.copy(), ss.lens.copy()), values.copy())
+    hpt = probe.hpt
+    width = probe.width
+    from repro.core.hpt import get_cdf_np64
+
+    cdfs = get_cdf_np64(hpt, ss).astype(np.float32)
+    n = len(ss)
+    cuts = [int(round(i * n / n_shards)) for i in range(1, n_shards)]
+    boundaries = []
+    for c in cuts:
+        lo = cdfs[c - 1] if c > 0 else 0.0
+        hi = cdfs[c] if c < n else 1.0
+        boundaries.append((float(lo) + float(hi)) / 2.0)
+    boundaries = np.asarray(boundaries, np.float32)
+    shard_of = np.searchsorted(boundaries, cdfs, side="right")
+    tis = []
+    for s in range(n_shards):
+        m = shard_of == s
+        b = LITSBuilder(hpt=hpt, **{k: v for k, v in builder_kw.items() if k != "hpt"})
+        sub = StringSet(ss.bytes[m], ss.lens[m])
+        b.bulkload(sub, values[m], width=width)
+        tis.append(freeze(b))
+    stacked = _stack_indices(tis)
+    return ShardedIndex(stacked, boundaries, n_shards, width)
+
+
+def _stack_indices(tis: List[TensorIndex]) -> TensorIndex:
+    """Pad every pool to the max size across shards, stack on a new axis 0."""
+    import dataclasses as dc
+
+    data_fields = [f.name for f in dc.fields(TensorIndex)
+                   if f.name not in ("width", "max_iters", "cnode_cap",
+                                     "rank_iters", "delta_probes", "cdf_steps")]
+    out = {}
+    for name in data_fields:
+        leaves = [np.asarray(jax.device_get(getattr(t, name))) for t in tis]
+        if leaves[0].ndim == 0:
+            out[name] = jnp.asarray(np.stack(leaves))
+            continue
+        mx = max(l.shape[0] for l in leaves)
+        padded = []
+        for l in leaves:
+            if l.shape[0] < mx:
+                pad = np.zeros((mx - l.shape[0],) + l.shape[1:], l.dtype)
+                l = np.concatenate([l, pad], axis=0)
+            padded.append(l)
+        out[name] = jnp.asarray(np.stack(padded))
+    meta = dict(
+        width=tis[0].width,
+        max_iters=max(t.max_iters for t in tis),
+        cnode_cap=tis[0].cnode_cap,
+        rank_iters=max(t.rank_iters for t in tis),
+        delta_probes=tis[0].delta_probes,
+        cdf_steps=max(t.cdf_steps for t in tis),
+    )
+    return TensorIndex(**out, **meta)
+
+
+def _slice_shard(stacked: TensorIndex, s) -> TensorIndex:
+    import dataclasses as dc
+
+    kw = {}
+    for f in dc.fields(TensorIndex):
+        v = getattr(stacked, f.name)
+        if f.name in ("width", "max_iters", "cnode_cap", "rank_iters",
+                      "delta_probes", "cdf_steps"):
+            kw[f.name] = v
+        else:
+            kw[f.name] = v[s] if hasattr(v, "ndim") else v
+    return TensorIndex(**kw)
+
+
+def make_service_fn(sidx: ShardedIndex, mesh, axis: str = "data",
+                    per_dest_capacity: int = 256, shard_axes=None):
+    """Returns a jitted shard_map fn: (qbytes, qlens) -> (found, lo, hi, overflow).
+
+    ``axis`` is the partition axis of the index (all_to_all routing axis);
+    ``shard_axes`` (default: just ``axis``) are the mesh axes the *query rows*
+    are sharded over — extra axes act as serving replicas (the index is
+    replicated across them).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    shard_axes = (axis,) if shard_axes is None else tuple(shard_axes)
+
+    n = sidx.n_shards
+    C = per_dest_capacity
+    W = sidx.width
+    boundaries = jnp.asarray(sidx.boundaries)
+
+    def local(stk: TensorIndex, qbytes, qlens):
+        # stk leaves carry a leading [1] local shard dim
+        ti = _slice_shard(stk, 0)
+        Q = qbytes.shape[0]
+        cdf = get_cdf_impl(ti.cdf_tab, ti.prob_tab, qbytes, qlens, 0)
+        owner = jnp.searchsorted(boundaries, cdf, side="right").astype(jnp.int32)
+        # pack queries into per-destination buffers of capacity C
+        order = jnp.argsort(owner)
+        so, sq, sl = owner[order], qbytes[order], qlens[order]
+        first = jnp.searchsorted(so, so, side="left")
+        slot = jnp.arange(Q, dtype=jnp.int32) - first.astype(jnp.int32)
+        ok = slot < C
+        sendq = jnp.zeros((n, C, W), jnp.uint8).at[so, slot].set(
+            sq * ok[:, None].astype(jnp.uint8), mode="drop")
+        sendl = jnp.zeros((n, C), jnp.int32).at[so, slot].set(
+            jnp.where(ok, sl, 0), mode="drop")
+        overflow = jnp.sum(~ok)
+        # route to owners
+        recvq = jax.lax.all_to_all(sendq, axis, 0, 0, tiled=False)
+        recvl = jax.lax.all_to_all(sendl, axis, 0, 0, tiled=False)
+        rq = recvq.reshape(n * C, W)
+        rl = recvl.reshape(n * C)
+        # §Perf H3: serving snapshots are immutable — skip the delta-buffer
+        # probe (16 hash probes x W-byte compares per query in search_batch).
+        item = _traverse(ti, rq, rl)
+        found, eid = _resolve_terminal(ti, rq, rl, item)
+        lo, hi = lookup_values(ti, eid, jnp.zeros_like(found))
+        found = found & (rl > 0)
+        # send results home
+        backf = jax.lax.all_to_all(found.reshape(n, C), axis, 0, 0)
+        backlo = jax.lax.all_to_all(lo.reshape(n, C), axis, 0, 0)
+        backhi = jax.lax.all_to_all(hi.reshape(n, C), axis, 0, 0)
+        # unpack to original query order
+        gather_f = backf[so, slot] & ok
+        gather_lo = jnp.where(gather_f, backlo[so, slot], 0)
+        gather_hi = jnp.where(gather_f, backhi[so, slot], 0)
+        inv = jnp.argsort(order)
+        return gather_f[inv], gather_lo[inv], gather_hi[inv], overflow[None]
+
+    qspec = P(shard_axes)
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(axis), qspec, qspec),
+        out_specs=(qspec, qspec, qspec, qspec),
+        check_rep=False,
+    )
+    return jax.jit(fn)

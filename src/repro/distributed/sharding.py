@@ -1,0 +1,85 @@
+"""Logical-axis sharding rules for the production mesh.
+
+Physical meshes (launch/mesh.py):
+  single-pod: (data=16, model=16)          axes ("data", "model")
+  multi-pod : (pod=2, data=16, model=16)   axes ("pod", "data", "model")
+
+Logical axes used by the model code:
+
+  batch -> all data-parallel axes (("pod",) +) ("data",)
+  fsdp  -> parameter sharding over the same data axes (ZeRO-3 style)
+  tp    -> ("model",)  tensor/expert parallelism
+  None  -> replicated
+
+The model layers call :func:`constrain` with *logical* names; when no mesh is
+active (CPU smoke tests) constraints are no-ops, so the same code runs
+everywhere.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    batch: Tuple[str, ...]
+    fsdp: Tuple[str, ...]
+    tp: Tuple[str, ...]
+
+    def resolve(self, logical: Optional[str]):
+        if logical is None:
+            return None
+        got = getattr(self, logical)
+        return got if got else None
+
+    def spec(self, *logical: Optional[str]) -> P:
+        return P(*[self.resolve(l) for l in logical])
+
+
+def rules_for_mesh(mesh: Mesh) -> MeshRules:
+    names = mesh.axis_names
+    data_axes = tuple(a for a in ("pod", "data") if a in names)
+    tp_axes = tuple(a for a in ("model",) if a in names)
+    return MeshRules(batch=data_axes, fsdp=data_axes, tp=tp_axes)
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    _state.mesh = mesh
+    _state.rules = rules_for_mesh(mesh) if mesh is not None else None
+
+
+def get_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def rules() -> Optional[MeshRules]:
+    return getattr(_state, "rules", None)
+
+
+def spec(*logical: Optional[str]) -> P:
+    r = rules()
+    if r is None:
+        return P()
+    return r.spec(*logical)
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical axis names; no-op without a mesh."""
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec(*logical)))
+
+
+def named_sharding(*logical: Optional[str]) -> Optional[NamedSharding]:
+    mesh = get_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, spec(*logical))

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the LITS hot paths.
+
+* ``hpt_cdf``     — batched HPT GetCDF (paper Alg. 1); HPT resident in VMEM;
+                    ``gather`` and one-hot ``onehot`` MXU variants.
+* ``hpt_locate``  — fused CDF walk + per-node linear model + slot clamp
+                    (paper Alg. 2 l.35-37).
+* ``cnode_probe`` — vectorized 16-bit h-pointer hash probe (the paper's
+                    AVX-512 experiment, App. A.7, mapped to VPU lanes).
+
+``ops.py`` holds the jit'd wrappers (interpret=True off-TPU); ``ref.py`` the
+pure-jnp oracles every kernel is validated against bit-exactly.
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: compact-leaf h-pointer probe (paper Sec. 3.3 / App. A.7).
+
+The paper evaluates an AVX-512 variant that compares eight 16-bit hash codes
+at once.  The TPU analogue compares a whole ``(BLOCK_B, K)`` tile of h-pointer
+hash codes against the per-query search hash in VPU lanes and returns the
+*first* matching slot per query (or -1), exactly mirroring the sequential
+match semantics of `compactSearch` (Alg. 2 l.21-27): dereference order is
+ascending slot order, so a false 16-bit collision ahead of the true key is
+resolved by the caller checking the key and re-probing from ``idx+1``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_B = 512
+
+
+def _probe_kernel(hashes_ref, qhash_ref, cnt_ref, from_ref, out_ref):
+    hashes = hashes_ref[...]          # (BB, K) int32 h-pointer hash codes
+    qh = qhash_ref[...][:, 0]         # (BB,)
+    cnt = cnt_ref[...][:, 0]          # (BB,) live slots per cnode
+    frm = from_ref[...][:, 0]         # (BB,) first slot to consider (re-probe support)
+    BB, K = hashes.shape
+    j = jax.lax.broadcasted_iota(jnp.int32, (BB, K), 1)
+    match = (hashes == qh[:, None]) & (j < cnt[:, None]) & (j >= frm[:, None])
+    # first match: argmax over int mask; rows without match -> -1
+    any_match = match.any(axis=1)
+    first = jnp.argmax(match.astype(jnp.int32), axis=1).astype(jnp.int32)
+    out_ref[...] = jnp.where(any_match, first, -1)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def cnode_probe_pallas(
+    hashes: jax.Array,  # (B, K) int32 — gathered h-pointer hash codes
+    qhash: jax.Array,   # (B,) int32 — query 16-bit hashes
+    cnt: jax.Array,     # (B,) int32 — live slot count per cnode
+    frm: jax.Array | None = None,  # (B,) first slot to consider
+    *,
+    block_b: int = DEFAULT_BLOCK_B,
+    interpret: bool = True,
+) -> jax.Array:
+    B, K = hashes.shape
+    if frm is None:
+        frm = jnp.zeros((B,), jnp.int32)
+    Bp = ((B + block_b - 1) // block_b) * block_b
+    h = jnp.zeros((Bp, K), jnp.int32).at[:B].set(hashes.astype(jnp.int32))
+    pad2 = lambda v: jnp.zeros((Bp, 1), jnp.int32).at[:B, 0].set(v.astype(jnp.int32))
+    out = pl.pallas_call(
+        _probe_kernel,
+        grid=(Bp // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, K), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, 1), jnp.int32),
+        interpret=interpret,
+    )(h, pad2(qhash), pad2(cnt), pad2(frm))
+    return out[:B, 0]

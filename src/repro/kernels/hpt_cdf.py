@@ -1,0 +1,141 @@
+"""Pallas TPU kernel: batched HPT GetCDF (paper Alg. 1).
+
+The hot spot of every LITS point operation is the per-node CDF walk:
+``O(len)`` dependent table lookups per query.  On CPU the paper keeps the 2 MB
+HPT resident in L2/L3; the TPU adaptation pins both HPT tables in **VMEM**
+(default 1024×128×2×4 B = 1 MB ≪ VMEM) and vectorizes the walk across a block
+of queries: the character loop stays sequential (it carries the rolling hash
+and running probability), while each step processes ``BLOCK_B`` queries in
+VPU lanes.
+
+Two table-lookup strategies:
+
+* ``gather``  — per-step 2-D vector gather ``tab[row, char]``.  This is the
+  natural formulation; on TPU it lowers to dynamic-gather ops.
+* ``onehot``  — MXU formulation: ``e_row^T · tab · e_char`` as two matmuls
+  (``(B,R) @ (R,C)`` then a masked row-dot).  Trades FLOPs for
+  gather-avoidance; profitable when R·C is small and the MXU is idle
+  (see EXPERIMENTS.md §Perf for the measured trade-off).
+
+Both validate against :mod:`repro.kernels.ref` in interpret mode across
+shape/dtype sweeps (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.hpt import FNV_PRIME
+
+DEFAULT_BLOCK_B = 256
+
+
+def _cdf_kernel_gather(qbytes_ref, qlens_ref, start_ref, cdf_tab_ref, prob_tab_ref,
+                       out_ref, *, max_steps: int):
+    qb = qbytes_ref[...].astype(jnp.int32)  # (BB, L)
+    ql = qlens_ref[...][:, 0]               # (BB,)
+    st = start_ref[...][:, 0]
+    cdf_tab = cdf_tab_ref[...]
+    prob_tab = prob_tab_ref[...]
+    R, C = cdf_tab.shape
+    BB, L = qb.shape
+    rowmask = jnp.uint32(R - 1)
+
+    def body(k, carry):
+        cdf, prob, h = carry
+        pos = st + k
+        c = jnp.take_along_axis(qb, jnp.minimum(pos, L - 1)[:, None], axis=1)[:, 0]
+        c = jnp.minimum(c, C - 1)
+        active = pos < ql
+        r = (h & rowmask).astype(jnp.int32)
+        cval = cdf_tab[r, c]
+        pval = prob_tab[r, c]
+        cdf = cdf + jnp.where(active, prob * cval, jnp.float32(0))
+        prob = prob * jnp.where(active, pval, jnp.float32(1))
+        h = jnp.where(active, (h ^ c.astype(jnp.uint32)) * FNV_PRIME, h)
+        return cdf, prob, h
+
+    cdf0 = jnp.zeros((BB,), jnp.float32)
+    prob0 = jnp.ones((BB,), jnp.float32)
+    h0 = jnp.zeros((BB,), jnp.uint32)
+    cdf, _, _ = jax.lax.fori_loop(0, min(max_steps, L), body, (cdf0, prob0, h0))
+    out_ref[...] = cdf[:, None]
+
+
+def _cdf_kernel_onehot(qbytes_ref, qlens_ref, start_ref, cdf_tab_ref, prob_tab_ref,
+                       out_ref, *, max_steps: int):
+    qb = qbytes_ref[...].astype(jnp.int32)
+    ql = qlens_ref[...][:, 0]
+    st = start_ref[...][:, 0]
+    cdf_tab = cdf_tab_ref[...]
+    prob_tab = prob_tab_ref[...]
+    R, C = cdf_tab.shape
+    BB, L = qb.shape
+    rowmask = jnp.uint32(R - 1)
+
+    def body(k, carry):
+        cdf, prob, h = carry
+        pos = st + k
+        c = jnp.take_along_axis(qb, jnp.minimum(pos, L - 1)[:, None], axis=1)[:, 0]
+        c = jnp.minimum(c, C - 1)
+        active = pos < ql
+        r = (h & rowmask).astype(jnp.int32)
+        # MXU gather: one-hot over rows -> (BB, C) row slice, then column select
+        row_oh = (jax.lax.broadcasted_iota(jnp.int32, (BB, R), 1) == r[:, None]).astype(jnp.float32)
+        col_oh = (jax.lax.broadcasted_iota(jnp.int32, (BB, C), 1) == c[:, None]).astype(jnp.float32)
+        crow = jax.lax.dot(row_oh, cdf_tab, precision=jax.lax.Precision.HIGHEST)
+        prow = jax.lax.dot(row_oh, prob_tab, precision=jax.lax.Precision.HIGHEST)
+        cval = jnp.sum(crow * col_oh, axis=1)
+        pval = jnp.sum(prow * col_oh, axis=1)
+        cdf = cdf + jnp.where(active, prob * cval, jnp.float32(0))
+        prob = prob * jnp.where(active, pval, jnp.float32(1))
+        h = jnp.where(active, (h ^ c.astype(jnp.uint32)) * FNV_PRIME, h)
+        return cdf, prob, h
+
+    cdf0 = jnp.zeros((BB,), jnp.float32)
+    prob0 = jnp.ones((BB,), jnp.float32)
+    h0 = jnp.zeros((BB,), jnp.uint32)
+    cdf, _, _ = jax.lax.fori_loop(0, min(max_steps, L), body, (cdf0, prob0, h0))
+    out_ref[...] = cdf[:, None]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_b", "max_steps", "variant", "interpret")
+)
+def hpt_cdf_pallas(
+    qbytes: jax.Array,  # (B, L) uint8/int32, zero padded
+    qlens: jax.Array,   # (B,) int32
+    start: jax.Array,   # (B,) int32
+    cdf_tab: jax.Array,  # (R, C) f32
+    prob_tab: jax.Array,
+    *,
+    block_b: int = DEFAULT_BLOCK_B,
+    max_steps: int = 64,
+    variant: str = "gather",
+    interpret: bool = True,
+) -> jax.Array:
+    B, L = qbytes.shape
+    Bp = ((B + block_b - 1) // block_b) * block_b
+    qb = jnp.zeros((Bp, L), qbytes.dtype).at[:B].set(qbytes)
+    ql = jnp.zeros((Bp, 1), jnp.int32).at[:B, 0].set(qlens)
+    st = jnp.zeros((Bp, 1), jnp.int32).at[:B, 0].set(jnp.broadcast_to(start, (B,)))
+    R, C = cdf_tab.shape
+    kernel = _cdf_kernel_gather if variant == "gather" else _cdf_kernel_onehot
+    out = pl.pallas_call(
+        functools.partial(kernel, max_steps=max_steps),
+        grid=(Bp // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, L), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+            pl.BlockSpec((R, C), lambda i: (0, 0)),  # HPT resident in VMEM
+            pl.BlockSpec((R, C), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, 1), jnp.float32),
+        interpret=interpret,
+    )(qb, ql, st, cdf_tab, prob_tab)
+    return out[:B, 0]

@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: fused HPT-CDF + model-node locate (paper Alg. 2, l.35-37).
+
+Fuses the CDF walk with the per-node linear model and slot clamp so the
+position never leaves VMEM:
+
+    pos = clamp(floor(alpha * GetCDF(s + prefixLen) + beta), 1, nslots - 2)
+
+``alpha/beta/nslots/start`` are per-query vectors — one traversal level of a
+*batch* of queries, each possibly sitting in a different model-based node.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.hpt import FNV_PRIME
+
+DEFAULT_BLOCK_B = 256
+
+
+def _locate_kernel(qbytes_ref, qlens_ref, start_ref, alpha_ref, beta_ref, nslots_ref,
+                   cdf_tab_ref, prob_tab_ref, out_ref, *, max_steps: int):
+    qb = qbytes_ref[...].astype(jnp.int32)
+    ql = qlens_ref[...][:, 0]
+    st = start_ref[...][:, 0]
+    alpha = alpha_ref[...][:, 0]
+    beta = beta_ref[...][:, 0]
+    nslots = nslots_ref[...][:, 0]
+    cdf_tab = cdf_tab_ref[...]
+    prob_tab = prob_tab_ref[...]
+    R, C = cdf_tab.shape
+    BB, L = qb.shape
+    rowmask = jnp.uint32(R - 1)
+
+    def body(k, carry):
+        cdf, prob, h = carry
+        pos = st + k
+        c = jnp.take_along_axis(qb, jnp.minimum(pos, L - 1)[:, None], axis=1)[:, 0]
+        c = jnp.minimum(c, C - 1)
+        active = pos < ql
+        r = (h & rowmask).astype(jnp.int32)
+        cdf = cdf + jnp.where(active, prob * cdf_tab[r, c], jnp.float32(0))
+        prob = prob * jnp.where(active, prob_tab[r, c], jnp.float32(1))
+        h = jnp.where(active, (h ^ c.astype(jnp.uint32)) * FNV_PRIME, h)
+        return cdf, prob, h
+
+    cdf0 = jnp.zeros((BB,), jnp.float32)
+    prob0 = jnp.ones((BB,), jnp.float32)
+    h0 = jnp.zeros((BB,), jnp.uint32)
+    cdf, _, _ = jax.lax.fori_loop(0, min(max_steps, L), body, (cdf0, prob0, h0))
+    t = alpha * cdf
+    t = t + beta
+    pos = jnp.floor(t).astype(jnp.int32)
+    pos = jnp.clip(pos, 1, nslots - 2)
+    out_ref[...] = pos[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "max_steps", "interpret"))
+def hpt_locate_pallas(
+    qbytes: jax.Array,   # (B, L)
+    qlens: jax.Array,    # (B,)
+    start: jax.Array,    # (B,)
+    alpha: jax.Array,    # (B,) f32
+    beta: jax.Array,     # (B,) f32
+    nslots: jax.Array,   # (B,) int32
+    cdf_tab: jax.Array,
+    prob_tab: jax.Array,
+    *,
+    block_b: int = DEFAULT_BLOCK_B,
+    max_steps: int = 64,
+    interpret: bool = True,
+) -> jax.Array:
+    B, L = qbytes.shape
+    Bp = ((B + block_b - 1) // block_b) * block_b
+    pad2 = lambda v, dt: jnp.zeros((Bp, 1), dt).at[:B, 0].set(v.astype(dt))
+    qb = jnp.zeros((Bp, L), qbytes.dtype).at[:B].set(qbytes)
+    R, C = cdf_tab.shape
+    out = pl.pallas_call(
+        functools.partial(_locate_kernel, max_steps=max_steps),
+        grid=(Bp // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, L), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+            pl.BlockSpec((R, C), lambda i: (0, 0)),
+            pl.BlockSpec((R, C), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, 1), jnp.int32),
+        interpret=interpret,
+    )(
+        qb, pad2(qlens, jnp.int32), pad2(jnp.broadcast_to(start, (B,)), jnp.int32),
+        pad2(alpha, jnp.float32), pad2(beta, jnp.float32), pad2(nslots, jnp.int32),
+        cdf_tab, prob_tab,
+    )
+    return out[:B, 0]

@@ -1,0 +1,52 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in ``interpret=True`` mode; on a
+real TPU backend they compile natively.  ``interpret`` is resolved once from
+the default backend unless overridden.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .cnode_probe import cnode_probe_pallas
+from .hpt_cdf import hpt_cdf_pallas
+from .hpt_locate import hpt_locate_pallas
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def hpt_cdf(qbytes, qlens, start=0, *, cdf_tab, prob_tab, variant: str = "gather",
+            block_b: int = 256, max_steps: int = 64, interpret: bool | None = None):
+    """Batched HPT GetCDF via the Pallas kernel."""
+    B = qbytes.shape[0]
+    start = jnp.broadcast_to(jnp.asarray(start, jnp.int32), (B,))
+    return hpt_cdf_pallas(
+        qbytes, jnp.asarray(qlens, jnp.int32), start, cdf_tab, prob_tab,
+        block_b=block_b, max_steps=max_steps, variant=variant,
+        interpret=_interpret_default() if interpret is None else interpret,
+    )
+
+
+def hpt_locate(qbytes, qlens, start, alpha, beta, nslots, *, cdf_tab, prob_tab,
+               block_b: int = 256, max_steps: int = 64, interpret: bool | None = None):
+    """Fused CDF + linear model + clamp -> slot positions."""
+    B = qbytes.shape[0]
+    bc = lambda v, dt: jnp.broadcast_to(jnp.asarray(v, dt), (B,))
+    return hpt_locate_pallas(
+        qbytes, bc(qlens, jnp.int32), bc(start, jnp.int32), bc(alpha, jnp.float32),
+        bc(beta, jnp.float32), bc(nslots, jnp.int32), cdf_tab, prob_tab,
+        block_b=block_b, max_steps=max_steps,
+        interpret=_interpret_default() if interpret is None else interpret,
+    )
+
+
+def cnode_probe(hashes, qhash, cnt, frm=None, *, block_b: int = 512,
+                interpret: bool | None = None):
+    """First matching h-pointer slot per query (or -1)."""
+    return cnode_probe_pallas(
+        hashes, qhash, cnt, frm, block_b=block_b,
+        interpret=_interpret_default() if interpret is None else interpret,
+    )

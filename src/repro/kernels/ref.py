@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose reference)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hpt import get_cdf_impl, positions_impl
+
+
+def hpt_cdf_ref(qbytes, qlens, start, cdf_tab, prob_tab, max_steps: int = 64):
+    return get_cdf_impl(cdf_tab, prob_tab, qbytes, qlens, start, max_steps)
+
+
+def hpt_locate_ref(qbytes, qlens, start, alpha, beta, nslots, cdf_tab, prob_tab,
+                   max_steps: int = 64):
+    return positions_impl(cdf_tab, prob_tab, qbytes, qlens, start, alpha, beta,
+                          nslots, max_steps)
+
+
+def cnode_probe_ref(hashes, qhash, cnt, frm=None):
+    B, K = hashes.shape
+    if frm is None:
+        frm = jnp.zeros((B,), jnp.int32)
+    j = jnp.arange(K, dtype=jnp.int32)[None, :]
+    match = (hashes.astype(jnp.int32) == qhash.astype(jnp.int32)[:, None]) \
+        & (j < cnt[:, None]) & (j >= frm[:, None])
+    any_match = match.any(axis=1)
+    first = jnp.argmax(match.astype(jnp.int32), axis=1).astype(jnp.int32)
+    return jnp.where(any_match, first, -1)

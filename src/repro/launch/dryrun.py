@@ -1,0 +1,261 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get(
+    "DRYRUN_XLA_FLAGS", "--xla_force_host_platform_device_count=512"
+)
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this produces ``memory_analysis()`` (proves it fits),
+``cost_analysis()`` (FLOPs/bytes for §Roofline) and the parsed collective
+byte totals from the post-SPMD HLO.  Results land as JSON under
+``experiments/dryrun/`` and are aggregated by ``repro.launch.roofline``.
+
+Usage:
+  python -m repro.launch.dryrun --arch deepseek-7b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--arch-filter moe]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SHAPES, cell_skip_reason, input_specs
+from repro.configs.registry import ARCHS, get_arch
+from repro.distributed.sharding import set_mesh
+from repro.launch.mesh import make_production_mesh
+from repro.launch import steps as steps_mod
+from repro.models import LMModel
+from repro.train.optimizer import AdamWConfig
+
+# v5e hardware constants (§Roofline)
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # B/s / chip
+ICI_BW = 50e9            # B/s / link
+
+_COLL_RE = re.compile(
+    r"\b(\w[\w-]*)\s*=\s*([a-z0-9]+)\[([\d,]*)\][^=]*?"
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)\b"
+)
+_GROUP_RE = re.compile(r"replica_groups=\{?\{([^}]*)\}")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+    "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8,
+}
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-device collective bytes, bucketed by op kind.
+
+    Cost model (ring algorithms, n = group size):
+      all-gather        moves ~result_bytes       per device
+      all-reduce        moves ~2 x result_bytes   per device
+      reduce-scatter    moves ~n x result_bytes   per device (input-sized)
+      all-to-all        moves ~result_bytes       per device
+      collective-permute moves result_bytes       per device
+    """
+    buckets: dict = {}
+    for line in hlo_text.splitlines():
+        if "all-" not in line and "reduce-scatter" not in line and "collective-permute" not in line:
+            continue
+        if "-start" in line and "-done" in line:
+            continue
+        if re.search(r"=\s*\S+\s+(all-gather-done|all-reduce-done|all-to-all-done|collective-permute-done)", line):
+            continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, op = m.group(2), m.group(3), m.group(4)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n_elem = 1
+        for d in dims.split(","):
+            if d:
+                n_elem *= int(d)
+        nbytes = n_elem * _DTYPE_BYTES[dtype]
+        gm = _GROUP_RE.search(line)
+        gsize = 1
+        if gm:
+            gsize = len([x for x in gm.group(1).split(",") if x.strip() != ""])
+        if op == "all-reduce":
+            moved = 2 * nbytes
+        elif op == "reduce-scatter":
+            moved = nbytes * max(gsize, 1)
+        else:
+            moved = nbytes
+        b = buckets.setdefault(op, {"count": 0, "bytes": 0})
+        b["count"] += 1
+        b["bytes"] += int(moved)
+    buckets["total_bytes"] = int(sum(v["bytes"] for k, v in buckets.items() if isinstance(v, dict)))
+    return buckets
+
+
+def roofline_terms(flops_per_dev, bytes_per_dev, coll_bytes_per_dev) -> dict:
+    return {
+        "compute_s": flops_per_dev / PEAK_FLOPS,
+        "memory_s": bytes_per_dev / HBM_BW,
+        "collective_s": coll_bytes_per_dev / ICI_BW,
+    }
+
+
+def model_flops(cfg, shape) -> float:
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch  # decode: one token per sequence
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             remat: bool = True, save_hlo: bool = False) -> dict:
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    n_dev = 512 if multi_pod else 256
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "kind": shape.kind}
+    skip = cell_skip_reason(cfg, shape)
+    if skip:
+        rec["skip"] = skip
+        return rec
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    set_mesh(mesh)
+    specs = input_specs(cfg, shape)
+    with mesh:
+        if shape.kind == "train":
+            # >100B params: bf16 weights + bf16 adam states (no f32 master) to
+            # fit v5e HBM; recorded as a deliberate trade-off in DESIGN.md §6.
+            big = cfg.param_count(True) > 100e9
+            pdt = jnp.bfloat16 if big else jnp.float32
+            gdt = jnp.bfloat16 if big else jnp.float32
+            model = LMModel(cfg, param_dtype=pdt)
+            opt_cfg = AdamWConfig(state_dtype=jnp.bfloat16)
+            n_batch_shards = 32 if multi_pod else 16
+            accum = steps_mod.choose_accum(cfg, shape, n_batch_shards)
+            rec["accum"] = accum
+            step = steps_mod.make_train_step(model, opt_cfg, accum=accum, grad_dtype=gdt)
+            in_sh = (
+                steps_mod.param_shardings(model),
+                steps_mod.opt_state_shardings(model),
+                steps_mod.batch_shardings(cfg, shape),
+            )
+            args = (model.abstract_params(), steps_mod.abstract_opt_state(model, opt_cfg), specs)
+            fn = jax.jit(step, in_shardings=in_sh, donate_argnums=(0, 1))
+        elif shape.kind == "prefill":
+            model = LMModel(cfg, param_dtype=jnp.bfloat16)
+            step = steps_mod.make_prefill_step(model)
+            in_sh = (steps_mod.param_shardings(model), steps_mod.batch_shardings(cfg, shape))
+            args = (model.abstract_params(), specs)
+            fn = jax.jit(step, in_shardings=in_sh)
+        else:  # decode
+            model = LMModel(cfg, param_dtype=jnp.bfloat16)
+            step = steps_mod.make_decode_step(model)
+            bs = steps_mod.batch_shardings(cfg, shape)
+            in_sh = (steps_mod.param_shardings(model), bs["cache"], bs["token"], bs["pos"])
+            args = (model.abstract_params(), specs["cache"], specs["token"], specs["pos"])
+            fn = jax.jit(step, in_shardings=in_sh, donate_argnums=(1,))
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    memory = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        memory[k] = int(getattr(mem, k, 0) or 0)
+    memory["total_per_device"] = (
+        memory["argument_size_in_bytes"] + memory["output_size_in_bytes"]
+        + memory["temp_size_in_bytes"] - memory.get("alias_size_in_bytes", 0)
+    )
+    cost = compiled.cost_analysis() or {}
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+    if save_hlo:
+        with open(os.path.join(out_dir, f"{arch}_{shape_name}_{mesh_name}.hlo"), "w") as f:
+            f.write(hlo)
+    mf = model_flops(cfg, shape)
+    terms = roofline_terms(flops_dev, bytes_dev, coll["total_bytes"])
+    dominant = max(terms, key=terms.get)
+    rec.update(
+        n_devices=n_dev,
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        memory=memory,
+        flops_per_device=flops_dev,
+        hlo_bytes_per_device=bytes_dev,
+        collectives=coll,
+        model_flops_global=mf,
+        model_flops_per_device=mf / n_dev,
+        useful_flops_ratio=(mf / n_dev) / flops_dev if flops_dev else None,
+        roofline=terms,
+        dominant=dominant,
+        params_unpadded=cfg.param_count(False),
+        params_padded=cfg.param_count(True),
+        params_active=cfg.active_param_count(),
+    )
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--arch-filter", default=None, help="substring filter for --all")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    cells = []
+    if args.all:
+        for name, cfg in ARCHS.items():
+            if args.arch_filter and args.arch_filter not in name:
+                continue
+            for sname in SHAPES:
+                cells.append((name, sname))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+
+    for arch, sname in cells:
+        for mp in meshes:
+            mesh_name = "2x16x16" if mp else "16x16"
+            path = os.path.join(args.out, f"{arch}_{sname}_{mesh_name}.json")
+            if args.skip_existing and os.path.exists(path):
+                print(f"[skip existing] {path}")
+                continue
+            try:
+                rec = run_cell(arch, sname, mp, args.out, save_hlo=args.save_hlo)
+            except Exception as e:  # record failures: they are bugs to fix
+                rec = {"arch": arch, "shape": sname, "mesh": mesh_name,
+                       "error": str(e), "traceback": traceback.format_exc()}
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=2)
+            if "error" in rec:
+                print(f"[FAIL] {arch} {sname} {mesh_name}: {rec['error'][:200]}")
+            elif "skip" in rec:
+                print(f"[skip] {arch} {sname} {mesh_name}: {rec['skip']}")
+            else:
+                m = rec["memory"]["total_per_device"] / 2**30
+                print(
+                    f"[ok] {arch} {sname} {mesh_name}: compile={rec['compile_s']}s "
+                    f"mem/dev={m:.2f}GiB dominant={rec['dominant']} "
+                    f"terms={{{', '.join(f'{k}={v:.3e}' for k, v in rec['roofline'].items())}}}"
+                )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Production mesh construction (see MULTI-POD DRY-RUN in the system spec).
+
+A FUNCTION, not a module constant: importing this module never touches jax
+device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Small mesh over however many (real or fake) local devices exist."""
+    n = len(jax.devices())
+    data = max(n // model_axis, 1)
+    return jax.make_mesh((data, model_axis), ("data", "model"))

@@ -1,0 +1,168 @@
+"""Step-function builders + input shardings shared by dryrun/train/serve."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec, cache_specs, input_specs
+from repro.distributed.sharding import get_mesh, spec as logical_spec
+from repro.models import LMModel
+from repro.train import optimizer as opt_mod
+
+
+def choose_accum(cfg: ArchConfig, shape: ShapeSpec, n_batch_shards: int = 16,
+                 act_budget_bytes: float = 4e9) -> int:
+    """Gradient-accumulation factor so rematerialized per-layer residuals fit.
+
+    Saved activations/device ≈ L × (B·S/accum/shards) × d × 2B; pick the
+    smallest power-of-two accum that brings this under ``act_budget_bytes``
+    while keeping the microbatch divisible by the batch shards.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    need = cfg.n_layers * B * S * cfg.d_model * 2 / (n_batch_shards * act_budget_bytes)
+    accum = 1
+    while accum < need and (B // (accum * 2)) >= n_batch_shards:
+        accum *= 2
+    return accum
+
+
+def make_train_step(model: LMModel, opt_cfg: opt_mod.AdamWConfig, accum: int = 1,
+                    grad_dtype=jnp.float32):
+    """Train step with grad accumulation over ``accum`` microbatches."""
+
+    def grads_of(params, mb):
+        (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(params, mb)
+        return grads, metrics
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            grads, metrics = grads_of(params, batch)
+        else:
+            mbs = jax.tree_util.tree_map(
+                lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]), batch
+            )
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, grad_dtype), params
+            )
+
+            def mb_step(gacc, mb):
+                g, metrics = grads_of(params, mb)
+                gacc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(grad_dtype), gacc, g
+                )
+                return gacc, metrics
+
+            grads, ms = jax.lax.scan(mb_step, g0, mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / accum, grads)
+            metrics = jax.tree_util.tree_map(lambda m: m.mean(0), ms)
+        params, opt_state, om = opt_mod.apply_updates(params, grads, opt_state, opt_cfg)
+        metrics = dict(metrics)
+        metrics.update(om)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: LMModel):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+
+    return prefill_step
+
+
+def make_decode_step(model: LMModel):
+    def serve_step(params, cache, token, pos):
+        return model.decode_step(params, cache, token, pos)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# shardings
+# ---------------------------------------------------------------------------
+
+def _ns(spec: P):
+    mesh = get_mesh()
+    return NamedSharding(mesh, spec) if mesh is not None else None
+
+
+def _batch_axes_for(batch_size: int):
+    """Batch mesh axes actually usable for this batch size (None if B too small)."""
+    from repro.distributed.sharding import rules
+    import numpy as np
+
+    r = rules()
+    if r is None or not r.batch:
+        return None
+    mesh = get_mesh()
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = int(np.prod([sizes[a] for a in r.batch]))
+    if batch_size % n == 0:
+        return r.batch
+    # try the 'data' axis alone (multi-pod with small batch)
+    if "data" in r.batch and batch_size % sizes["data"] == 0:
+        return ("data",)
+    return None
+
+
+def batch_shardings(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    b = _batch_axes_for(shape.global_batch)
+    out = {}
+    for k, v in input_specs(cfg, shape).items():
+        if k == "cache":
+            out[k] = cache_shardings(cfg, shape.global_batch)
+        elif k == "pos":
+            out[k] = _ns(P())
+        elif k == "token":
+            out[k] = _ns(P(b))
+        else:
+            out[k] = _ns(P(b, *([None] * (len(v.shape) - 1))))
+    return out
+
+
+def cache_shardings(cfg: ArchConfig, batch_size: int) -> dict:
+    """KV/SSM cache shardings.  When the batch can't cover the data axes
+    (long_500k has B=1), the KV *window* axis is sequence-sharded over them
+    instead — decode attention then reduces over a sharded axis and XLA
+    inserts the corresponding collectives."""
+    st = logical_spec("tp")
+    t = st[0] if len(st) else None
+    b = _batch_axes_for(batch_size)
+    from repro.distributed.sharding import rules
+
+    r = rules()
+    seq = None if b is not None else (r.batch if r and r.batch else None)
+    out = {}
+    if cfg.has_attn:
+        out["k"] = _ns(P(None, b, seq, t, None))
+        out["v"] = _ns(P(None, b, seq, t, None))
+        if cfg.kv_cache_dtype == "int8":
+            out["k_scale"] = _ns(P(None, b, seq, t))
+            out["v_scale"] = _ns(P(None, b, seq, t))
+    if cfg.has_mamba:
+        out["conv"] = _ns(P(None, b, None, t))
+        out["ssm"] = _ns(P(None, b, t, None))
+    return out
+
+
+def param_shardings(model: LMModel) -> dict:
+    return jax.tree_util.tree_map(
+        _ns, model.param_specs(), is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def opt_state_shardings(model: LMModel) -> dict:
+    ps = param_shardings(model)
+    return {"m": ps, "v": ps, "step": _ns(P())}
+
+
+def abstract_opt_state(model: LMModel, opt_cfg: opt_mod.AdamWConfig) -> dict:
+    ap = model.abstract_params()
+    z = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, opt_cfg.state_dtype), ap
+    )
+    return {"m": z, "v": jax.tree_util.tree_map(lambda s: s, z),
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}

@@ -1,0 +1,61 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On this CPU container, full archs are dry-run-only; ``--reduced`` runs the
+real loop on the smoke-scale config.  On a TPU fleet the same entry point
+runs the production mesh (mesh axes map to the slice topology).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_arch
+from repro.data.pipeline import PipelineConfig, TokenPipeline
+from repro.launch.mesh import make_host_mesh
+from repro.distributed.sharding import set_mesh
+from repro.models import LMModel
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_loop import TrainConfig, train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--use-mesh", action="store_true",
+                    help="build a host mesh over local devices")
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if args.use_mesh:
+        set_mesh(make_host_mesh())
+    model = LMModel(cfg)
+    pipe = TokenPipeline(PipelineConfig(vocab=cfg.vocab, seq_len=args.seq,
+                                        global_batch=args.batch))
+    opt = AdamWConfig(lr=args.lr, state_dtype=jnp.float32,
+                      warmup_steps=max(args.steps // 10, 1), total_steps=args.steps)
+    tcfg = TrainConfig(steps=args.steps, ckpt_every=args.ckpt_every,
+                       ckpt_dir=args.ckpt_dir, accum=args.accum)
+
+    def log(step, m):
+        if step % 10 == 0:
+            print(f"step {step:5d} loss={m['loss']:.4f} gnorm={m['grad_norm']:.3f} "
+                  f"{m['step_time_s'] * 1e3:.0f}ms")
+
+    out = train(model, pipe.batch_at, opt, tcfg, on_step=log)
+    print(f"done: loss {out['history'][0]['loss']:.3f} -> {out['history'][-1]['loss']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

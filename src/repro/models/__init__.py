@@ -1,0 +1,4 @@
+"""LM model stack for the assigned architecture pool."""
+from .transformer import LMModel
+
+__all__ = ["LMModel"]

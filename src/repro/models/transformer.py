@@ -1,0 +1,466 @@
+"""LM model assembly for all assigned architecture families.
+
+One code path covers: dense GQA (llama-style / squared-ReLU / partial-RoPE /
+SWA), MoE (top-k, optional parallel dense residual — arctic), mamba-1 SSM
+(attention-free), hybrid parallel attn+mamba (hymba), encoder-only backbones
+(hubert) and VLM backbones with stub patch frontends (internvl2).
+
+Layers are stacked (leading ``L`` dim) and executed with ``lax.scan`` so the
+lowered HLO stays one-block-sized regardless of depth — this is what keeps
+the 480B-parameter dry-run compile tractable.  Training wraps the block in
+``jax.checkpoint`` (full rematerialization policy by default).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import constrain, spec as logical_spec
+from .layers import (
+    ACT_DTYPE,
+    cast_tree,
+    quantize_kv,
+    apply_rope,
+    decode_attention,
+    flash_attention,
+    mlp_apply,
+    moe_apply,
+    rms_norm,
+)
+from .ssm import mamba_decode_step, mamba_forward
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    init: str = "normal"  # normal | zeros | a_log | dt_bias | ones
+
+
+class LMModel:
+    def __init__(self, cfg: ArchConfig, param_dtype=jnp.float32):
+        self.cfg = cfg
+        self.param_dtype = param_dtype
+
+    # ------------------------------------------------------------------
+    # parameter table
+    # ------------------------------------------------------------------
+    def layer_defs(self) -> Dict[str, ParamDef]:
+        c = self.cfg
+        d, f = c.d_model, c.d_ff
+        defs: Dict[str, ParamDef] = {"ln1": ParamDef((d,), (None,), "zeros")}
+        if c.has_attn:
+            H, KV, hd = c.n_heads_padded, c.n_kv_padded, c.hd
+            defs["attn.wq"] = ParamDef((d, H * hd), ("fsdp", "tp"))
+            defs["attn.wk"] = ParamDef((d, KV * hd), ("fsdp", "tp"))
+            defs["attn.wv"] = ParamDef((d, KV * hd), ("fsdp", "tp"))
+            defs["attn.wo"] = ParamDef((H * hd, d), ("tp", "fsdp"))
+        if c.has_mamba:
+            di, N, dtr = c.d_inner, c.ssm_state, c.dt_rank
+            defs["mamba.in_proj"] = ParamDef((d, 2 * di), ("fsdp", "tp"))
+            defs["mamba.conv_w"] = ParamDef((c.ssm_conv, di), (None, "tp"))
+            defs["mamba.conv_b"] = ParamDef((di,), ("tp",), "zeros")
+            defs["mamba.x_proj"] = ParamDef((di, dtr + 2 * N), ("tp", None))
+            defs["mamba.dt_proj"] = ParamDef((dtr, di), (None, "tp"))
+            defs["mamba.dt_bias"] = ParamDef((di,), ("tp",), "dt_bias")
+            defs["mamba.A_log"] = ParamDef((di, N), ("tp", None), "a_log")
+            defs["mamba.D"] = ParamDef((di,), ("tp",), "ones")
+            defs["mamba.out_proj"] = ParamDef((di, d), ("tp", "fsdp"))
+        n_mlp_mats = 2 if c.mlp_act == "swiglu" else 1
+        if c.has_moe:
+            E = c.n_experts
+            defs["ln2"] = ParamDef((d,), (None,), "zeros")
+            # expert weights live in the weight-stationary layout (f over fsdp;
+            # §Perf H1): decode/prefill psum small activation partials instead
+            # of all-gathering expert matrices every step.
+            defs["moe.router"] = ParamDef((d, E), ("fsdp", None))
+            defs["moe.wi0"] = ParamDef((E, d, f), ("tp", None, "fsdp"))
+            if c.mlp_act == "swiglu":
+                defs["moe.wi1"] = ParamDef((E, d, f), ("tp", None, "fsdp"))
+            defs["moe.wo"] = ParamDef((E, f, d), ("tp", "fsdp", None))
+            if c.moe_dense_ff:
+                fd = c.moe_dense_ff
+                defs["dense.wi0"] = ParamDef((d, fd), ("fsdp", "tp"))
+                if c.mlp_act == "swiglu":
+                    defs["dense.wi1"] = ParamDef((d, fd), ("fsdp", "tp"))
+                defs["dense.wo"] = ParamDef((fd, d), ("tp", "fsdp"))
+        elif f:
+            defs["ln2"] = ParamDef((d,), (None,), "zeros")
+            defs["mlp.wi0"] = ParamDef((d, f), ("fsdp", "tp"))
+            if c.mlp_act == "swiglu":
+                defs["mlp.wi1"] = ParamDef((d, f), ("fsdp", "tp"))
+            defs["mlp.wo"] = ParamDef((f, d), ("tp", "fsdp"))
+        if c.family == "hybrid":
+            defs["fuse_a"] = ParamDef((d,), (None,), "zeros")
+            defs["fuse_m"] = ParamDef((d,), (None,), "zeros")
+        return defs
+
+    def top_defs(self) -> Dict[str, ParamDef]:
+        c = self.cfg
+        d = c.d_model
+        defs = {
+            "embed": ParamDef((c.vocab_padded, d), ("tp", "fsdp")),
+            "final_ln": ParamDef((d,), (None,), "zeros"),
+            "lm_head": ParamDef((d, c.vocab_padded), ("fsdp", "tp")),
+        }
+        if c.frontend != "none":
+            defs["frontend_proj"] = ParamDef((c.frontend_dim, d), (None, "fsdp"))
+        return defs
+
+    # ------------------------------------------------------------------
+    # init / abstract / specs
+    # ------------------------------------------------------------------
+    def _materialize(self, name: str, pd: ParamDef, key, stacked: bool):
+        shape = (self.cfg.n_layers,) + pd.shape if stacked else pd.shape
+        if pd.init == "zeros":
+            return jnp.zeros(shape, self.param_dtype)
+        if pd.init == "ones":
+            return jnp.ones(shape, self.param_dtype)
+        if pd.init == "dt_bias":
+            return jnp.full(shape, -4.0, self.param_dtype)
+        if pd.init == "a_log":
+            N = pd.shape[-1]
+            base = jnp.log(jnp.arange(1, N + 1, dtype=jnp.float32))
+            return jnp.broadcast_to(base, shape).astype(self.param_dtype)
+        fan_in = pd.shape[-2] if len(pd.shape) >= 2 else pd.shape[-1]
+        scale = 1.0 / np.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, shape, jnp.float32) * scale).astype(self.param_dtype)
+
+    def init(self, rng) -> dict:
+        tops = self.top_defs()
+        layers = self.layer_defs()
+        keys = jax.random.split(rng, len(tops) + len(layers))
+        params: dict = {"blocks": {}}
+        i = 0
+        for name, pd in tops.items():
+            params[name] = self._materialize(name, pd, keys[i], stacked=False)
+            i += 1
+        for name, pd in layers.items():
+            params["blocks"][name] = self._materialize(name, pd, keys[i], stacked=True)
+            i += 1
+        return params
+
+    def abstract_params(self) -> dict:
+        out: dict = {"blocks": {}}
+        for name, pd in self.top_defs().items():
+            out[name] = jax.ShapeDtypeStruct(pd.shape, self.param_dtype)
+        for name, pd in self.layer_defs().items():
+            out["blocks"][name] = jax.ShapeDtypeStruct(
+                (self.cfg.n_layers,) + pd.shape, self.param_dtype
+            )
+        return out
+
+    def param_specs(self) -> dict:
+        out: dict = {"blocks": {}}
+        for name, pd in self.top_defs().items():
+            out[name] = logical_spec(*pd.logical)
+        for name, pd in self.layer_defs().items():
+            out["blocks"][name] = logical_spec(None, *pd.logical)
+        return out
+
+    # ------------------------------------------------------------------
+    # blocks
+    # ------------------------------------------------------------------
+    def _attn_train(self, p, h, positions, return_kv: bool = False):
+        c = self.cfg
+        B, S, d = h.shape
+        H, KV, hd = c.n_heads_padded, c.n_kv_padded, c.hd
+        q = jnp.einsum("bsd,de->bse", h, p["attn.wq"]).reshape(B, S, H, hd)
+        k = jnp.einsum("bsd,de->bse", h, p["attn.wk"]).reshape(B, S, KV, hd)
+        v = jnp.einsum("bsd,de->bse", h, p["attn.wv"]).reshape(B, S, KV, hd)
+        q = constrain(q, "batch", None, "tp", None)
+        k = constrain(k, "batch", None, "tp", None)
+        q = apply_rope(q, positions, c.rope_variant)
+        k = apply_rope(k, positions, c.rope_variant)
+        o = flash_attention(
+            q, k, v, causal=c.causal, window=c.swa_window,
+        )
+        o = constrain(o, "batch", None, "tp", None)
+        out = jnp.einsum("bse,ed->bsd", o.reshape(B, S, H * hd), p["attn.wo"])
+        if return_kv:
+            if c.swa_window:
+                W = c.swa_window
+                if S > W:
+                    # ring-buffer layout: slot j must hold absolute position
+                    # p ≡ j (mod W); roll the trailing window accordingly.
+                    k, v = k[:, -W:], v[:, -W:]
+                    shift = (S - W) % W
+                    k = jnp.roll(k, shift, axis=1)
+                    v = jnp.roll(v, shift, axis=1)
+                elif S < W:
+                    pad = [(0, 0), (0, W - S), (0, 0), (0, 0)]
+                    k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+            return out, (k.astype(ACT_DTYPE), v.astype(ACT_DTYPE))
+        return out
+
+    def _block_train(self, p, x, positions):
+        c = self.cfg
+        p = cast_tree(p)
+        h = rms_norm(x, p["ln1"], c.norm_eps)
+        mix = None
+        if c.family == "hybrid":
+            a = self._attn_train(p, h, positions)
+            m = mamba_forward(h, {k.split(".", 1)[1]: v for k, v in p.items() if k.startswith("mamba.")}, c)
+            ga = jax.nn.sigmoid(p["fuse_a"].astype(jnp.float32)).astype(x.dtype)
+            gm = jax.nn.sigmoid(p["fuse_m"].astype(jnp.float32)).astype(x.dtype)
+            mix = a * ga + m * gm
+        elif c.has_attn:
+            mix = self._attn_train(p, h, positions)
+        else:  # pure ssm
+            mix = mamba_forward(h, {k.split(".", 1)[1]: v for k, v in p.items() if k.startswith("mamba.")}, c)
+        x = x + mix
+        x = constrain(x, "batch", None, None)
+        if c.has_moe:
+            h2 = rms_norm(x, p["ln2"], c.norm_eps)
+            moe_p = {k.split(".", 1)[1]: v for k, v in p.items() if k.startswith("moe.")}
+            y = moe_apply(h2, moe_p, top_k=c.top_k, capacity_factor=c.capacity_factor, act=c.mlp_act)
+            if c.moe_dense_ff:
+                dense_p = {k.split(".", 1)[1]: v for k, v in p.items() if k.startswith("dense.")}
+                y = y + mlp_apply(h2, dense_p, c.mlp_act)
+            x = x + y
+        elif c.d_ff:
+            h2 = rms_norm(x, p["ln2"], c.norm_eps)
+            mlp_p = {k.split(".", 1)[1]: v for k, v in p.items() if k.startswith("mlp.")}
+            x = x + mlp_apply(h2, mlp_p, c.mlp_act)
+        return constrain(x, "batch", None, None)
+
+    # ------------------------------------------------------------------
+    # embedding / head
+    # ------------------------------------------------------------------
+    def _embed_inputs(self, params, batch) -> Tuple[jax.Array, jax.Array, int]:
+        """Returns (x (B,S,d) bf16, positions (B,S), n_prefix_tokens)."""
+        c = self.cfg
+        if c.frontend == "frame":
+            x = jnp.einsum("bsf,fd->bsd", batch["frames"].astype(ACT_DTYPE),
+                           params["frontend_proj"].astype(ACT_DTYPE))
+            B, S = x.shape[:2]
+            pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+            return constrain(x, "batch", None, None), pos, 0
+        tok = batch["tokens"]
+        emb = jnp.take(params["embed"].astype(ACT_DTYPE), tok, axis=0)
+        n_prefix = 0
+        if c.frontend == "patch" and "patches" in batch:
+            pe = jnp.einsum("bpf,fd->bpd", batch["patches"].astype(ACT_DTYPE),
+                            params["frontend_proj"].astype(ACT_DTYPE))
+            emb = jnp.concatenate([pe, emb], axis=1)
+            n_prefix = pe.shape[1]
+        B, S = emb.shape[:2]
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        return constrain(emb, "batch", None, None), pos, n_prefix
+
+    def _head(self, params, x) -> jax.Array:
+        x = rms_norm(x, params["final_ln"], self.cfg.norm_eps)
+        logits = jnp.einsum(
+            "bsd,dv->bsv", x, params["lm_head"].astype(x.dtype),
+            preferred_element_type=jnp.float32,
+        )
+        return constrain(logits, "batch", None, "tp")
+
+    # ------------------------------------------------------------------
+    # train / forward
+    # ------------------------------------------------------------------
+    def forward(self, params, batch, remat: bool = True) -> jax.Array:
+        x, positions, n_prefix = self._embed_inputs(params, batch)
+        block = self._block_train
+        if remat:
+            # policy selectable for §Perf experiments: 'none' recomputes the
+            # whole block (min memory, 4 logical passes); 'dots' saves matmul
+            # outputs (3 passes, + per-layer activation residency).
+            import os
+
+            policy = os.environ.get("REPRO_REMAT_POLICY", "none")
+            if policy == "dots":
+                block = jax.checkpoint(
+                    block, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+            else:
+                block = jax.checkpoint(block, static_argnums=())
+
+        def scan_body(x, p_layer):
+            return block(p_layer, x, positions), None
+
+        x, _ = jax.lax.scan(scan_body, x, params["blocks"])
+        logits = self._head(params, x)
+        if n_prefix:
+            logits = logits[:, n_prefix:]
+        return logits
+
+    def loss(self, params, batch) -> Tuple[jax.Array, dict]:
+        logits = self.forward(params, batch)
+        labels = batch["labels"]
+        V = logits.shape[-1]
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        safe = jnp.clip(labels, 0, V - 1)
+        ll = jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+        mask = (labels >= 0).astype(jnp.float32)
+        loss = -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+        return loss, {"loss": loss, "tokens": mask.sum()}
+
+    # ------------------------------------------------------------------
+    # prefill / decode
+    # ------------------------------------------------------------------
+    def prefill(self, params, batch, max_len: Optional[int] = None) -> Tuple[dict, jax.Array]:
+        """Forward returning the decode cache + last-position logits.
+
+        ``max_len`` pre-allocates KV headroom for subsequent decode steps
+        (full-attention caches append at slot ``pos``; SWA caches are fixed
+        window-sized ring buffers and never grow).
+        """
+        c = self.cfg
+        x, positions, n_prefix = self._embed_inputs(params, batch)
+
+        def scan_body(x, p_layer):
+            p_layer = cast_tree(p_layer)
+            h = rms_norm(x, p_layer["ln1"], c.norm_eps)
+            saved = {}
+            if c.family == "hybrid":
+                a, (kc, vc) = self._attn_train(p_layer, h, positions, return_kv=True)
+                mp = {k.split(".", 1)[1]: v for k, v in p_layer.items() if k.startswith("mamba.")}
+                m, hstate, cstate = mamba_forward(h, mp, c, return_state=True)
+                ga = jax.nn.sigmoid(p_layer["fuse_a"].astype(jnp.float32)).astype(x.dtype)
+                gm = jax.nn.sigmoid(p_layer["fuse_m"].astype(jnp.float32)).astype(x.dtype)
+                mix = a * ga + m * gm
+                saved = {"k": kc, "v": vc, "ssm": hstate, "conv": cstate.astype(ACT_DTYPE)}
+            elif c.has_attn:
+                a, (kc, vc) = self._attn_train(p_layer, h, positions, return_kv=True)
+                mix = a
+                saved = {"k": kc, "v": vc}
+            else:
+                mp = {k.split(".", 1)[1]: v for k, v in p_layer.items() if k.startswith("mamba.")}
+                m, hstate, cstate = mamba_forward(h, mp, c, return_state=True)
+                mix = m
+                saved = {"ssm": hstate, "conv": cstate.astype(ACT_DTYPE)}
+            x = x + mix
+            if c.has_moe:
+                h2 = rms_norm(x, p_layer["ln2"], c.norm_eps)
+                moe_p = {k.split(".", 1)[1]: v for k, v in p_layer.items() if k.startswith("moe.")}
+                y = moe_apply(h2, moe_p, top_k=c.top_k,
+                              capacity_factor=c.capacity_factor, act=c.mlp_act)
+                if c.moe_dense_ff:
+                    dp = {k.split(".", 1)[1]: v for k, v in p_layer.items() if k.startswith("dense.")}
+                    y = y + mlp_apply(h2, dp, c.mlp_act)
+                x = x + y
+            elif c.d_ff:
+                h2 = rms_norm(x, p_layer["ln2"], c.norm_eps)
+                mlp_p = {k.split(".", 1)[1]: v for k, v in p_layer.items() if k.startswith("mlp.")}
+                x = x + mlp_apply(h2, mlp_p, c.mlp_act)
+            return constrain(x, "batch", None, None), saved
+
+        x, caches = jax.lax.scan(scan_body, x, params["blocks"])
+        logits = self._head(params, x[:, -1:, :])[:, 0]
+        cache = {}
+        if "k" in caches:
+            kc, vc = caches["k"], caches["v"]
+            if max_len is not None and not c.swa_window and max_len > kc.shape[2]:
+                pad = [(0, 0), (0, 0), (0, max_len - kc.shape[2]), (0, 0), (0, 0)]
+                kc, vc = jnp.pad(kc, pad), jnp.pad(vc, pad)
+            if c.kv_cache_dtype == "int8":  # §Perf H1-4: halve decode HBM reads
+                kc, ks = quantize_kv(kc)
+                vc, vs = quantize_kv(vc)
+                cache["k_scale"] = constrain(ks, None, "batch", None, "tp")
+                cache["v_scale"] = constrain(vs, None, "batch", None, "tp")
+            cache["k"] = constrain(kc, None, "batch", None, "tp", None)
+            cache["v"] = constrain(vc, None, "batch", None, "tp", None)
+        if "ssm" in caches:
+            cache["ssm"] = caches["ssm"]
+            cache["conv"] = caches["conv"]
+        return cache, logits
+
+    def decode_step(self, params, cache, token, pos):
+        """One decode step against a pre-filled cache. token: (B,), pos: scalar.
+
+        Layers iterate via ``fori_loop`` with the stacked cache as loop-carried
+        state updated in place (dynamic_update_slice on the leading layer dim):
+        with buffer donation this keeps exactly ONE cache-sized allocation —
+        a scan's xs/ys formulation double-buffers it.
+        """
+        c = self.cfg
+        x = jnp.take(params["embed"].astype(ACT_DTYPE), token, axis=0)  # (B, d)
+        x = constrain(x, "batch", None)
+        B = x.shape[0]
+        H, KV, hd = c.n_heads_padded, c.n_kv_padded, c.hd
+
+        def body(l, carry):
+            x, cache = carry
+            p_layer = cast_tree(jax.tree_util.tree_map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, l, 0, keepdims=False),
+                params["blocks"],
+            ))
+            h = rms_norm(x, p_layer["ln1"], c.norm_eps)
+            mix = jnp.zeros_like(x)
+            if c.has_attn:
+                kc = jax.lax.dynamic_index_in_dim(cache["k"], l, 0, keepdims=False)
+                vc = jax.lax.dynamic_index_in_dim(cache["v"], l, 0, keepdims=False)
+                int8kv = c.kv_cache_dtype == "int8"
+                if int8kv:
+                    ksc = jax.lax.dynamic_index_in_dim(cache["k_scale"], l, 0, keepdims=False)
+                    vsc = jax.lax.dynamic_index_in_dim(cache["v_scale"], l, 0, keepdims=False)
+                W = kc.shape[1]
+                q = jnp.einsum("bd,de->be", h, p_layer["attn.wq"]).reshape(B, H, hd)
+                kn = jnp.einsum("bd,de->be", h, p_layer["attn.wk"]).reshape(B, KV, hd)
+                vn = jnp.einsum("bd,de->be", h, p_layer["attn.wv"]).reshape(B, KV, hd)
+                posb = jnp.broadcast_to(pos[None, None], (B, 1))
+                q = apply_rope(q[:, None], posb, c.rope_variant)[:, 0]
+                kn = apply_rope(kn[:, None], posb, c.rope_variant)[:, 0]
+                slot = jnp.mod(pos, W) if c.swa_window else pos
+                if int8kv:
+                    knq, kns = quantize_kv(kn)
+                    vnq, vns = quantize_kv(vn)
+                    kc = jax.lax.dynamic_update_slice_in_dim(kc, knq[:, None], slot, axis=1)
+                    vc = jax.lax.dynamic_update_slice_in_dim(vc, vnq[:, None], slot, axis=1)
+                    ksc = jax.lax.dynamic_update_slice_in_dim(ksc, kns[:, None], slot, axis=1)
+                    vsc = jax.lax.dynamic_update_slice_in_dim(vsc, vns[:, None], slot, axis=1)
+                    from .layers import dequantize_kv
+
+                    o = decode_attention(q, dequantize_kv(kc, ksc), dequantize_kv(vc, vsc),
+                                         pos, window=c.swa_window)
+                else:
+                    kc = jax.lax.dynamic_update_slice_in_dim(kc, kn[:, None].astype(kc.dtype), slot, axis=1)
+                    vc = jax.lax.dynamic_update_slice_in_dim(vc, vn[:, None].astype(vc.dtype), slot, axis=1)
+                    o = decode_attention(q, kc, vc, pos, window=c.swa_window)
+                mix = jnp.einsum("be,ed->bd", o.reshape(B, H * hd), p_layer["attn.wo"])
+                cache = dict(cache)
+                cache["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], kc[None], l, axis=0)
+                cache["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], vc[None], l, axis=0)
+                if int8kv:
+                    cache["k_scale"] = jax.lax.dynamic_update_slice_in_dim(cache["k_scale"], ksc[None], l, axis=0)
+                    cache["v_scale"] = jax.lax.dynamic_update_slice_in_dim(cache["v_scale"], vsc[None], l, axis=0)
+            if c.has_mamba:
+                ssm_l = jax.lax.dynamic_index_in_dim(cache["ssm"], l, 0, keepdims=False)
+                conv_l = jax.lax.dynamic_index_in_dim(cache["conv"], l, 0, keepdims=False)
+                mp = {k.split(".", 1)[1]: v for k, v in p_layer.items() if k.startswith("mamba.")}
+                m, hs, cs = mamba_decode_step(h, mp, c, ssm_l, conv_l.astype(ACT_DTYPE))
+                cache = dict(cache)
+                cache["ssm"] = jax.lax.dynamic_update_slice_in_dim(cache["ssm"], hs[None], l, axis=0)
+                cache["conv"] = jax.lax.dynamic_update_slice_in_dim(
+                    cache["conv"], cs[None].astype(cache["conv"].dtype), l, axis=0)
+                if c.family == "hybrid":
+                    ga = jax.nn.sigmoid(p_layer["fuse_a"].astype(jnp.float32)).astype(x.dtype)
+                    gm = jax.nn.sigmoid(p_layer["fuse_m"].astype(jnp.float32)).astype(x.dtype)
+                    mix = mix * ga + m * gm
+                else:
+                    mix = m
+            x = x + mix
+            if c.has_moe:
+                h2 = rms_norm(x, p_layer["ln2"], c.norm_eps)
+                moe_p = {k.split(".", 1)[1]: v for k, v in p_layer.items() if k.startswith("moe.")}
+                y = moe_apply(h2[:, None], moe_p, top_k=c.top_k,
+                              capacity_factor=4.0, act=c.mlp_act)[:, 0]
+                if c.moe_dense_ff:
+                    dp = {k.split(".", 1)[1]: v for k, v in p_layer.items() if k.startswith("dense.")}
+                    y = y + mlp_apply(h2[:, None], dp, c.mlp_act)[:, 0]
+                x = x + y
+            elif c.d_ff:
+                h2 = rms_norm(x, p_layer["ln2"], c.norm_eps)
+                mlp_p = {k.split(".", 1)[1]: v for k, v in p_layer.items() if k.startswith("mlp.")}
+                x = x + mlp_apply(h2[:, None], mlp_p, c.mlp_act)[:, 0]
+            return x, cache
+
+        x, cache = jax.lax.fori_loop(0, c.n_layers, body, (x, cache))
+        logits = self._head(params, x[:, None, :])[:, 0]
+        return cache, logits

@@ -1,0 +1,85 @@
+"""LITS-backed prompt cache: exact-match prompt string -> cached KV state.
+
+This is the paper's index doing the string-keyed job LLM serving actually
+has: request routing by prompt identity.  Keys are prompt byte strings
+(tokenizer-independent), values are slot ids in a host-side cache store.
+Lookups run the batched jitted LITS search; insertions use the device delta
+buffer and are merged (minor compaction) when it fills — the serving loop
+never blocks on a host rebuild.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    LITSBuilder, StringSet, freeze, insert_batch, lookup_values,
+    merge_delta, pad_queries, search_batch,
+)
+
+
+@dataclasses.dataclass
+class PrefixCacheStats:
+    hits: int = 0
+    misses: int = 0
+    inserts: int = 0
+    merges: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+class PrefixCache:
+    """Exact-match prompt -> slot id, LITS-indexed."""
+
+    def __init__(self, capacity: int = 4096, width: int = 256, seed_keys=None):
+        self.builder = LITSBuilder()
+        seed = seed_keys or [b"\x01<prefix-cache-sentinel>"]
+        self.builder.bulkload(StringSet.from_list(seed, width=width), width=width)
+        self.index = freeze(self.builder, delta_capacity=capacity)
+        self.store: Dict[int, object] = {}
+        self._next_slot = 0
+        self.stats = PrefixCacheStats()
+
+    def lookup(self, prompts: List[bytes]) -> Tuple[np.ndarray, np.ndarray]:
+        """Returns (hit mask, slot ids)."""
+        qb, ql = pad_queries(prompts, self.index.width)
+        found, eid, isd = search_batch(self.index, jnp.asarray(qb), jnp.asarray(ql))
+        lo, hi = lookup_values(self.index, eid, isd)
+        slots = np.asarray(lo)
+        found = np.asarray(found)
+        # sentinel key is never a real hit
+        self.stats.hits += int(found.sum())
+        self.stats.misses += int((~found).sum())
+        return found, np.where(found, slots, -1)
+
+    def admit(self, prompts: List[bytes], states: List[object]) -> np.ndarray:
+        """Insert prompt->state pairs; returns assigned slot ids."""
+        slots = []
+        for st in states:
+            sid = self._next_slot
+            self._next_slot += 1
+            self.store[sid] = st
+            slots.append(sid)
+        qb, ql = pad_queries(prompts, self.index.width)
+        vals = np.asarray(slots, np.int64)
+        self.index, ins, upd = insert_batch(
+            self.index, jnp.asarray(qb), jnp.asarray(ql),
+            jnp.asarray((vals & 0xFFFFFFFF).astype(np.uint32).view(np.int32)),
+            jnp.asarray((vals >> 32).astype(np.int32)),
+        )
+        self.stats.inserts += int(np.asarray(ins).sum())
+        if bool(self.index.delta_overflow) or (
+            float(self.index.de_count) / self.index.de_off.shape[0] > 0.75
+        ):
+            self.index = merge_delta(self.builder, self.index)
+            self.stats.merges += 1
+        return np.asarray(slots)
+
+    def get_state(self, slot: int):
+        return self.store.get(int(slot))

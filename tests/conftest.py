@@ -1,0 +1,10 @@
+import numpy as np
+import pytest
+
+# NOTE: no XLA_FLAGS here — smoke tests and benches must see ONE device.
+# Multi-device tests spawn subprocesses that set the flag themselves.
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(12345)

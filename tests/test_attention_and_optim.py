@@ -1,0 +1,138 @@
+"""Flash-attention custom VJP vs naive reference; optimizer math; rope."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.layers import apply_rope, decode_attention, flash_attention
+
+
+def _naive(q, k, v, causal=True, window=0):
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    g = H // KV
+    qg = q.reshape(B, S, KV, g, hd)
+    s = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32) / np.sqrt(hd)
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(T)[None, :]
+    m = jnp.ones((S, T), bool)
+    if causal:
+        m &= qp >= kp
+    if window:
+        m &= qp - kp < window
+    s = jnp.where(m[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    o = jnp.einsum("bkgst,btkh->bskgh", p.astype(v.dtype), v)
+    return o.reshape(B, S, H, hd)
+
+
+@pytest.mark.parametrize("S,H,KV,hd,causal,window", [
+    (64, 4, 2, 16, True, 0),
+    (128, 8, 2, 32, True, 24),
+    (64, 4, 4, 8, False, 0),
+    (96, 6, 2, 16, True, 0),
+    (32, 2, 1, 8, True, 8),
+])
+def test_flash_fwd_bwd_matches_naive(S, H, KV, hd, causal, window):
+    rng = np.random.default_rng(S + H)
+    q = jnp.asarray(rng.normal(size=(2, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, S, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, S, KV, hd)), jnp.float32)
+    kw = dict(causal=causal, window=window, q_chunk=32, kv_chunk=32)
+    o1 = flash_attention(q, k, v, **kw)
+    o2 = _naive(q, k, v, causal, window)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)
+    g1 = jax.grad(lambda *a: flash_attention(*a, **kw).sum(), argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(lambda *a: _naive(*a, causal, window).sum(), argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-5)
+
+
+def test_decode_attention_matches_full():
+    """Single-token decode attention == last row of full attention."""
+    rng = np.random.default_rng(0)
+    B, S, H, KV, hd = 2, 17, 4, 2, 16
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    full = _naive(q, k, v, causal=True)
+    dec = decode_attention(q[:, -1], k, v, jnp.int32(S - 1))
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full[:, -1]), atol=2e-5)
+
+
+def test_decode_attention_ring_buffer_swa():
+    """Ring-buffer SWA decode == full attention with a window mask."""
+    rng = np.random.default_rng(1)
+    B, H, KV, hd, W = 2, 4, 2, 8, 8
+    S = 13  # cache has wrapped: pos 12, window 8
+    k_lin = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    v_lin = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(B, 1, H, hd)), jnp.float32)
+    # build the ring buffer: slot j holds position p = max{p <= 12 : p % W == j}
+    kc = jnp.zeros((B, W, KV, hd))
+    vc = jnp.zeros((B, W, KV, hd))
+    for p in range(S):
+        kc = kc.at[:, p % W].set(k_lin[:, p])
+        vc = vc.at[:, p % W].set(v_lin[:, p])
+    dec = decode_attention(q[:, 0], kc, vc, jnp.int32(S - 1), window=W)
+    qf = jnp.concatenate([jnp.zeros((B, S - 1, H, hd)), q], axis=1)
+    full = _naive(qf, k_lin, v_lin, causal=True, window=W)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full[:, -1]), atol=2e-5)
+
+
+def test_rope_is_rotation():
+    """RoPE preserves norms and relative-position inner products."""
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(1, 8, 2, 16)), jnp.float32)
+    r = apply_rope(x, jnp.arange(8), "full")
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(r), axis=-1), rtol=1e-5)
+    # relative property: <R(p)q, R(p+d)k> depends only on d
+    q = jnp.asarray(rng.normal(size=(1, 1, 1, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 1, 1, 16)), jnp.float32)
+    dots = []
+    for p in (0, 3, 7):
+        qr = apply_rope(q, jnp.array([p]), "full")
+        kr = apply_rope(k, jnp.array([p + 5]), "full")
+        dots.append(float(jnp.sum(qr * kr)))
+    assert abs(dots[0] - dots[1]) < 1e-4 and abs(dots[1] - dots[2]) < 1e-4
+
+
+def test_partial_rope_leaves_tail_untouched():
+    x = jnp.asarray(np.random.default_rng(3).normal(size=(1, 4, 2, 16)), jnp.float32)
+    r = apply_rope(x, jnp.arange(4), "partial")
+    np.testing.assert_array_equal(np.asarray(r[..., 8:]), np.asarray(x[..., 8:]))
+    assert not np.allclose(np.asarray(r[..., :8]), np.asarray(x[..., :8]))
+
+
+def test_adamw_matches_reference_impl():
+    """One AdamW step vs a straight-line numpy reference."""
+    from repro.train.optimizer import AdamWConfig, apply_updates, init_state
+
+    cfg = AdamWConfig(lr=0.1, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.01,
+                      clip_norm=1e9, state_dtype=jnp.float32,
+                      warmup_steps=1, total_steps=10, min_lr_frac=1.0)
+    p = {"w": jnp.asarray([[1.0, -2.0], [0.5, 3.0]])}
+    g = {"w": jnp.asarray([[0.1, 0.2], [-0.3, 0.4]])}
+    st = init_state(p, cfg)
+    newp, st2, _ = apply_updates(p, g, st, cfg)
+    # reference
+    m = 0.1 * np.asarray(g["w"])
+    v = 0.001 * np.asarray(g["w"]) ** 2
+    mh, vh = m / 0.1, v / 0.001
+    ref = np.asarray(p["w"]) - 0.1 * (mh / (np.sqrt(vh) + 1e-8) + 0.01 * np.asarray(p["w"]))
+    np.testing.assert_allclose(np.asarray(newp["w"]), ref, rtol=1e-5)
+    assert int(st2["step"]) == 1
+
+
+def test_grad_clipping():
+    from repro.train.optimizer import AdamWConfig, apply_updates, init_state, global_norm
+
+    cfg = AdamWConfig(lr=1e-3, clip_norm=1.0, state_dtype=jnp.float32)
+    p = {"w": jnp.ones((4,))}
+    g = {"w": jnp.full((4,), 100.0)}
+    assert float(global_norm(g)) > 1.0
+    newp, st, metrics = apply_updates(p, g, init_state(p, cfg), cfg)
+    assert float(metrics["grad_norm"]) == pytest.approx(200.0, rel=1e-3)
+    assert np.isfinite(np.asarray(newp["w"])).all()

@@ -1,0 +1,91 @@
+"""GPKL hardness metric (Eq. 4) + PMSS decision model."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.gpkl import gpkl, local_gpkl, pkl
+from repro.core.pmss import PMSS, AlwaysLIT, AlwaysTrie
+from repro.core.strings import StringSet
+
+key_st = st.binary(min_size=1, max_size=16).filter(lambda b: 0 not in b)
+
+
+def _brute_pkl(keys):
+    """Direct implementation of Def. 3.2 for cross-checking Eq. 4."""
+    def cpl(a, b):
+        c = 0
+        while c < min(len(a), len(b)) and a[c] == b[c]:
+            c += 1
+        return c
+
+    base = len(keys[0])
+    for k in keys[1:]:
+        base = min(base, cpl(keys[0], k))
+    out = []
+    for i, s in enumerate(keys):
+        left = cpl(keys[i - 1], s) if i > 0 else -1
+        right = cpl(s, keys[i + 1]) if i + 1 < len(keys) else -1
+        out.append(max(max(left, right) + 1 - base, 1))
+    return out
+
+
+@given(st.lists(key_st, min_size=2, max_size=32))
+@settings(max_examples=200, deadline=None)
+def test_pkl_matches_bruteforce(keys):
+    keys = sorted(set(keys))
+    if len(keys) < 2:
+        return
+    ss = StringSet.from_list(keys)
+    got = pkl(ss)
+    want = _brute_pkl(keys)
+    assert np.allclose(got, want)
+
+
+def test_gpkl_orders_hardness():
+    """Shared long prefixes => higher GPKL (paper Table 2 intuition)."""
+    easy = sorted({bytes([a, b]) for a in range(97, 117) for b in range(97, 117)})
+    hard = sorted({b"http://very/long/shared/prefix/" + bytes([a, b])
+                   for a in range(97, 117) for b in range(97, 117)})
+    # subgroup-local shared prefixes (not global, so Def 3.3 can't strip them)
+    groups = [bytes([103 + g]) * 8 for g in range(8)]
+    clustered = sorted({g + bytes([a, b]) for g in groups
+                        for a in range(97, 102) for b in range(97, 107)})
+    g_easy = gpkl(StringSet.from_list(easy))
+    g_hard = gpkl(StringSet.from_list(hard))
+    # shared prefix of ALL keys is excluded by Def 3.3 => equal gpkl
+    assert abs(g_easy - g_hard) < 1e-9
+    g_clustered = gpkl(StringSet.from_list(clustered))
+    assert g_clustered > g_easy
+
+
+def test_local_gpkl_group_of_32():
+    keys = sorted({b"%08d" % i for i in range(1000)})
+    ss = StringSet.from_list(keys)
+    lg = local_gpkl(ss, g=32)
+    assert 0 < lg <= gpkl(ss) + 8
+
+
+def test_pmss_monotone_decisions():
+    from repro.core.pmss import _seed_tables
+
+    # the analytic seed tables encode the paper's Fig. 7 structure: trie wins
+    # for very hard small groups, LIT for big easy groups.  (Benchmarked
+    # tables from fig7_pmss may legitimately differ on CPU hosts, so this
+    # shape test pins the seed explicitly.)
+    p = PMSS(tables=_seed_tables())
+    assert p.decide(3.0, 1 << 22) == "lit"
+    assert p.decide(21.0, 1 << 5) == "trie"
+    assert AlwaysLIT().decide(50, 10) == "lit"
+    assert AlwaysTrie().decide(1, 1 << 20) == "trie"
+    # whatever tables are installed must at least produce positive latencies
+    q = PMSS()
+    assert q.latency("lit", 10, 1 << 12) > 0
+    assert q.latency("trie", 10, 1 << 12) > 0
+
+
+def test_pmss_workload_mix():
+    p = PMSS()
+    p.update_workload(0.2, 0.8)
+    assert abs(p.f_read - 0.2) < 1e-9 and abs(p.f_write - 0.8) < 1e-9
+    lat = p.latency("lit", 10, 1 << 16)
+    assert lat > 0

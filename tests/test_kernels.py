@@ -1,0 +1,96 @@
+"""Per-kernel Pallas (interpret) vs ref.py oracle — shape/dtype sweeps."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import StringSet, build_hpt
+from repro.core.strings import random_strings
+from repro.kernels import ops, ref
+
+
+@pytest.fixture(scope="module")
+def setup():
+    rng = np.random.default_rng(11)
+    keys = random_strings(rng, 700, 1, 40)
+    ss = StringSet.from_list(keys, width=48)
+    hpt = build_hpt(ss, rows=256, cols=128)
+    return ss, jnp.asarray(hpt.cdf_tab), jnp.asarray(hpt.prob_tab), rng
+
+
+@pytest.mark.parametrize("variant", ["gather", "onehot"])
+@pytest.mark.parametrize("bsz,width", [(1, 8), (7, 16), (64, 48), (300, 33)])
+def test_hpt_cdf_matches_ref(setup, variant, bsz, width):
+    ss, cdf_tab, prob_tab, rng = setup
+    sub = ss.take(np.arange(bsz) % len(ss)).pad_to(max(width, ss.width))
+    qb = jnp.asarray(sub.bytes[:, :width] if width < sub.width else sub.bytes)
+    ql = jnp.asarray(np.minimum(sub.lens, width))
+    out = ops.hpt_cdf(qb, ql, 0, cdf_tab=cdf_tab, prob_tab=prob_tab,
+                      variant=variant, block_b=64)
+    want = ref.hpt_cdf_ref(qb, ql, 0, cdf_tab, prob_tab)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.parametrize("rows", [64, 1024])
+def test_hpt_cdf_rows_sweep(setup, rows):
+    ss, _, _, rng = setup
+    keys = random_strings(rng, 128, 1, 24)
+    s2 = StringSet.from_list(keys, width=32)
+    hpt = build_hpt(s2, rows=rows, cols=128)
+    cdf_tab, prob_tab = jnp.asarray(hpt.cdf_tab), jnp.asarray(hpt.prob_tab)
+    qb, ql = jnp.asarray(s2.bytes), jnp.asarray(s2.lens)
+    out = ops.hpt_cdf(qb, ql, 0, cdf_tab=cdf_tab, prob_tab=prob_tab)
+    want = ref.hpt_cdf_ref(qb, ql, 0, cdf_tab, prob_tab)
+    assert (np.asarray(out) == np.asarray(want)).all()  # bit-exact gather path
+
+
+def test_hpt_cdf_start_offsets(setup):
+    ss, cdf_tab, prob_tab, rng = setup
+    qb, ql = jnp.asarray(ss.bytes), jnp.asarray(ss.lens)
+    start = jnp.asarray(rng.integers(0, 6, size=len(ss)), jnp.int32)
+    out = ops.hpt_cdf(qb, ql, start, cdf_tab=cdf_tab, prob_tab=prob_tab)
+    want = ref.hpt_cdf_ref(qb, ql, start, cdf_tab, prob_tab)
+    assert (np.asarray(out) == np.asarray(want)).all()
+
+
+def test_hpt_locate_matches_ref(setup):
+    ss, cdf_tab, prob_tab, rng = setup
+    B = len(ss)
+    qb, ql = jnp.asarray(ss.bytes), jnp.asarray(ss.lens)
+    alpha = jnp.asarray(rng.uniform(1, 500, B), jnp.float32)
+    beta = jnp.asarray(rng.uniform(0, 4, B), jnp.float32)
+    ns = jnp.asarray(rng.integers(8, 4096, B), jnp.int32)
+    start = jnp.asarray(rng.integers(0, 4, B), jnp.int32)
+    out = ops.hpt_locate(qb, ql, start, alpha, beta, ns, cdf_tab=cdf_tab, prob_tab=prob_tab)
+    want = ref.hpt_locate_ref(qb, ql, start, alpha, beta, ns, cdf_tab, prob_tab)
+    assert (np.asarray(out) == np.asarray(want)).all()
+    assert (np.asarray(out) >= 1).all()
+    assert (np.asarray(out) <= np.asarray(ns) - 2).all()
+
+
+@pytest.mark.parametrize("K", [8, 16, 32])
+@pytest.mark.parametrize("B", [1, 65, 512])
+def test_cnode_probe_matches_ref(B, K):
+    rng = np.random.default_rng(B * 31 + K)
+    h = rng.integers(0, 1 << 16, size=(B, K)).astype(np.int32)
+    qh = np.where(rng.random(B) < 0.6, h[np.arange(B), rng.integers(0, K, B)],
+                  rng.integers(0, 1 << 16, B)).astype(np.int32)
+    cnt = rng.integers(0, K + 1, B).astype(np.int32)
+    frm = rng.integers(0, 3, B).astype(np.int32)
+    out = ops.cnode_probe(jnp.asarray(h), jnp.asarray(qh), jnp.asarray(cnt), jnp.asarray(frm))
+    want = ref.cnode_probe_ref(jnp.asarray(h), jnp.asarray(qh), jnp.asarray(cnt), jnp.asarray(frm))
+    assert (np.asarray(out) == np.asarray(want)).all()
+
+
+def test_kernel_matches_index_positions(setup):
+    """Kernel-computed locate == the canonical jnp path used by the index."""
+    from repro.core.hpt import positions_jnp
+
+    ss, cdf_tab, prob_tab, rng = setup
+    qb, ql = jnp.asarray(ss.bytes), jnp.asarray(ss.lens)
+    B = len(ss)
+    alpha, beta = jnp.float32(321.7), jnp.float32(1.0)
+    m = jnp.int32(1024)
+    kpos = ops.hpt_locate(qb, ql, 0, jnp.full((B,), alpha), jnp.full((B,), beta),
+                          jnp.full((B,), m), cdf_tab=cdf_tab, prob_tab=prob_tab)
+    jpos = positions_jnp(cdf_tab, prob_tab, qb, ql, 0, alpha, beta, m)
+    assert (np.asarray(kpos) == np.asarray(jpos)).all()

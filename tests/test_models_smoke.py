@@ -1,0 +1,139 @@
+"""Per-arch reduced-config smoke tests: fwd + train step + decode on CPU.
+
+The FULL configs are exercised only via the dry-run (ShapeDtypeStruct)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES, cell_skip_reason, input_specs
+from repro.configs.registry import ARCHS
+from repro.launch import steps as steps_mod
+from repro.models import LMModel
+from repro.train.optimizer import AdamWConfig, init_state
+
+
+def _batch(r, rng, B=2, S=16):
+    if r.frontend == "frame":
+        return {"frames": jax.random.normal(rng, (B, S, r.frontend_dim), jnp.bfloat16),
+                "labels": jax.random.randint(rng, (B, S), 0, r.vocab)}
+    batch = {"tokens": jax.random.randint(rng, (B, S), 0, r.vocab),
+             "labels": jax.random.randint(rng, (B, S), 0, r.vocab)}
+    if r.frontend == "patch":
+        batch["patches"] = jax.random.normal(
+            rng, (B, r.n_frontend_tokens, r.frontend_dim), jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_reduced_forward_and_train_step(arch):
+    r = ARCHS[arch].reduced()
+    m = LMModel(r)
+    rng = jax.random.PRNGKey(0)
+    params = m.init(rng)
+    batch = _batch(r, rng)
+    logits = jax.jit(lambda p, b: m.forward(p, b))(params, batch)
+    assert logits.shape == (2, 16, r.vocab_padded)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all()), "NaN in logits"
+    opt_cfg = AdamWConfig(state_dtype=jnp.float32)
+    step = steps_mod.make_train_step(m, opt_cfg)
+    opt_state = init_state(params, opt_cfg)
+    p2, o2, metrics = jax.jit(step)(params, opt_state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"])) and float(metrics["grad_norm"]) > 0
+    # params actually moved
+    moved = any(
+        not np.allclose(np.asarray(a, np.float32), np.asarray(b, np.float32))
+        for a, b in zip(jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(p2))
+    )
+    assert moved
+
+
+@pytest.mark.parametrize("arch", [a for a in sorted(ARCHS) if ARCHS[a].decoder])
+def test_reduced_prefill_decode_consistency(arch):
+    """Greedy decode after prefill == teacher-forced forward argmax."""
+    r = ARCHS[arch].reduced()
+    m = LMModel(r)
+    rng = jax.random.PRNGKey(1)
+    params = m.init(rng)
+    B, S = 2, 12
+    toks = jax.random.randint(rng, (B, S), 0, r.vocab)
+    full = jax.jit(lambda p, b: m.forward(p, b, remat=False))(params, {"tokens": toks})
+    cache, logits_last = jax.jit(m.prefill, static_argnames="max_len")(
+        params, {"tokens": toks}, max_len=S + 4)
+    np.testing.assert_allclose(
+        np.asarray(full[:, -1], np.float32), np.asarray(logits_last, np.float32),
+        rtol=2e-2, atol=2e-2,
+    )
+    # one decode step matches a full forward on S+1 tokens
+    nxt = jnp.argmax(logits_last[:, : r.vocab], -1).astype(jnp.int32)
+    cache2, dec_logits = jax.jit(m.decode_step)(params, cache, nxt, jnp.int32(S))
+    toks2 = jnp.concatenate([toks, nxt[:, None]], axis=1)
+    full2 = jax.jit(lambda p, b: m.forward(p, b, remat=False))(params, {"tokens": toks2})
+    np.testing.assert_allclose(
+        np.asarray(full2[:, -1], np.float32), np.asarray(dec_logits, np.float32),
+        rtol=6e-2, atol=6e-2,
+    )
+
+
+def test_grad_accumulation_equivalence():
+    """accum=2 must match accum=1 on the same global batch (fp tolerance)."""
+    r = ARCHS["deepseek-7b"].reduced()
+    m = LMModel(r)
+    rng = jax.random.PRNGKey(2)
+    params = m.init(rng)
+    batch = _batch(r, rng, B=4)
+    opt_cfg = AdamWConfig(state_dtype=jnp.float32)
+    o = init_state(params, opt_cfg)
+    p1, _, m1 = jax.jit(steps_mod.make_train_step(m, opt_cfg, accum=1))(params, o, batch)
+    o2 = init_state(params, opt_cfg)
+    p2, _, m2 = jax.jit(steps_mod.make_train_step(m, opt_cfg, accum=2))(params, o2, batch)
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-2
+    for a, b in zip(jax.tree_util.tree_leaves(p1), jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32), np.asarray(b, np.float32),
+                                   rtol=2e-2, atol=2e-3)
+
+
+def test_cell_skip_matrix_counts():
+    """32 runnable cells + 8 documented skips (DESIGN.md §6)."""
+    runnable = skipped = 0
+    for cfg in ARCHS.values():
+        for shape in SHAPES.values():
+            if cell_skip_reason(cfg, shape) is None:
+                runnable += 1
+            else:
+                skipped += 1
+    assert runnable == 32 and skipped == 8
+
+
+def test_input_specs_shapes():
+    cfg = ARCHS["deepseek-7b"]
+    sp = input_specs(cfg, SHAPES["train_4k"])
+    assert sp["tokens"].shape == (256, 4096)
+    sp = input_specs(cfg, SHAPES["decode_32k"])
+    assert sp["cache"]["k"].shape == (30, 128, 32768, 32, 128)
+    swa = ARCHS["h2o-danube-3-4b"]
+    sp = input_specs(swa, SHAPES["long_500k"])
+    assert sp["cache"]["k"].shape[2] == swa.swa_window  # window-bounded cache
+
+
+def test_int8_kv_cache_decode_close_to_bf16():
+    """§Perf H1-4: int8 KV cache decode stays within quantization tolerance."""
+    import dataclasses
+
+    r = dataclasses.replace(ARCHS["deepseek-7b"].reduced(), kv_cache_dtype="int8")
+    m = LMModel(r)
+    rng = jax.random.PRNGKey(3)
+    params = m.init(rng)
+    B, S = 2, 12
+    toks = jax.random.randint(rng, (B, S), 0, r.vocab)
+    cache, ll = jax.jit(m.prefill, static_argnames="max_len")(
+        params, {"tokens": toks}, max_len=S + 4)
+    assert cache["k"].dtype == jnp.int8 and cache["k_scale"].dtype == jnp.bfloat16
+    nxt = jnp.argmax(ll[:, : r.vocab], -1).astype(jnp.int32)
+    cache2, dl = jax.jit(m.decode_step)(params, cache, nxt, jnp.int32(S))
+    assert cache2["k"].dtype == jnp.int8
+    full = jax.jit(lambda p, b: m.forward(p, b, remat=False))(
+        params, {"tokens": jnp.concatenate([toks, nxt[:, None]], 1)})
+    err = float(jnp.abs(full[:, -1].astype(jnp.float32) - dl.astype(jnp.float32)).max())
+    assert err < 0.15, err

@@ -1,0 +1,106 @@
+"""Serving engine with LITS prefix cache + YCSB workload integration."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS
+from repro.core import LITSBuilder, StringSet
+from repro.data import ycsb
+from repro.data.pipeline import RecordStore
+from repro.data.synthetic import load as load_dataset
+from repro.models import LMModel
+from repro.serve.engine import ServeEngine
+from repro.serve.prefix_cache import PrefixCache
+
+
+def test_prefix_cache_hit_miss_cycle():
+    pc = PrefixCache(capacity=256)
+    prompts = [b"prompt-%03d" % i for i in range(20)]
+    hit, _ = pc.lookup(prompts)
+    assert not hit.any()
+    pc.admit(prompts, [{"cache": {"x": jnp.zeros((2, 2))}, "logits": jnp.zeros(4)}] * 20)
+    hit2, slots = pc.lookup(prompts)
+    assert hit2.all()
+    assert pc.get_state(slots[0]) is not None
+    assert pc.stats.hit_rate > 0
+
+
+def test_prefix_cache_merge_under_pressure():
+    pc = PrefixCache(capacity=32)
+    for wave in range(4):
+        prompts = [b"w%d-%03d" % (wave, i) for i in range(16)]
+        pc.admit(prompts, [{"cache": {}, "logits": jnp.zeros(2)}] * 16)
+    assert pc.stats.merges >= 1
+    hit, _ = pc.lookup([b"w0-000", b"w3-015"])
+    assert hit.all()
+
+
+def test_serve_engine_cache_reuse():
+    r = ARCHS["chatglm3-6b"].reduced()
+    m = LMModel(r)
+    params = m.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(m, params)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, r.vocab, size=(2, 8)).astype(np.int32)
+    out1 = eng.generate(prompts, n_steps=4)
+    assert eng.stats.prefills == 2 and eng.stats.cached_prefills == 0
+    out2 = eng.generate(prompts, n_steps=4)
+    assert eng.stats.cached_prefills == 2, "second pass must be served from LITS cache"
+    assert np.array_equal(out1["generated"], out2["generated"])
+
+
+def test_record_store_dedup():
+    keys = [b"doc-%04d" % i for i in range(200)]
+    rs = RecordStore(keys)
+    probe = keys[:10] + [b"new-%d" % i for i in range(5)]
+    mask = rs.dedup(probe)
+    assert (~mask[:10]).all() and mask[10:].all()
+    found, rows = rs.lookup_batch(keys[5:8])
+    assert found.all()
+
+
+@pytest.mark.parametrize("workload", ["A", "B", "C", "D", "F"])
+def test_ycsb_against_oracle(workload):
+    rng = np.random.default_rng(1)
+    keys = load_dataset("reddit", 1200, seed=2)
+    loaded = sorted(keys)[:1000]
+    new = sorted(keys)[1000:]
+    b = LITSBuilder()
+    b.bulkload(StringSet.from_list(loaded), np.arange(len(loaded), dtype=np.int64))
+    oracle = {k: i for i, k in enumerate(sorted(set(loaded)))}
+    ops = ycsb.generate(workload, sorted(set(loaded)), new, 400, seed=3)
+    for op in ops:
+        if op.kind == "read":
+            got = b.get(op.key)
+            assert got == oracle.get(op.key), (op.kind, op.key)
+        elif op.kind == "update":
+            assert b.update(op.key, op.value) == (op.key in oracle)
+            if op.key in oracle:
+                oracle[op.key] = op.value
+        elif op.kind == "rmw":
+            v = b.get(op.key)
+            if v is not None:
+                b.update(op.key, v + 1)
+                oracle[op.key] += 1
+        elif op.kind == "insert":
+            assert b.insert(op.key, op.value) == (op.key not in oracle)
+            oracle[op.key] = op.value
+
+
+def test_ycsb_scan_and_delete():
+    keys = sorted(set(load_dataset("email", 800, seed=4)))
+    b = LITSBuilder()
+    b.bulkload(StringSet.from_list(keys), np.arange(len(keys), dtype=np.int64))
+    ops = ycsb.generate("E", keys, [], 100, seed=5, scan_len=8)
+    for op in ops:
+        if op.kind == "scan":
+            got = [k for k, _ in b.scan(op.key, op.scan_len)]
+            expect = [k for k in keys if k >= op.key][:8]
+            assert got == expect
+    dels = ycsb.generate("delete-only", keys, [], 200, seed=6)
+    seen = set()
+    for op in dels:
+        expect_ok = op.key not in seen
+        assert b.delete(op.key) == expect_ok
+        seen.add(op.key)

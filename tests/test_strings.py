@@ -1,0 +1,88 @@
+"""String-tensor utilities: ordering, cpl, hashing (unit + property)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.strings import (
+    StringSet, compare_to, dedup_sorted, group_cpl, is_sorted, key_hash16,
+    pack_prefix_u64, pairwise_cpl, sort_order,
+)
+
+keys_strategy = st.lists(
+    st.binary(min_size=1, max_size=24).filter(lambda b: 0 not in b),
+    min_size=1, max_size=64,
+)
+
+
+@given(keys_strategy)
+@settings(max_examples=200, deadline=None)
+def test_sort_order_matches_python(keys):
+    ss = StringSet.from_list(keys)
+    order = sort_order(ss)
+    got = [keys[i] for i in order]
+    assert got == sorted(keys)
+
+
+@given(keys_strategy)
+@settings(max_examples=100, deadline=None)
+def test_dedup_sorted(keys):
+    ss = StringSet.from_list(keys)
+    srt = ss.take(sort_order(ss))
+    uniq = srt.take(dedup_sorted(srt))
+    assert uniq.tolist() == sorted(set(keys))
+
+
+@given(st.binary(min_size=1, max_size=16).filter(lambda b: 0 not in b),
+       st.binary(min_size=1, max_size=16).filter(lambda b: 0 not in b))
+@settings(max_examples=200, deadline=None)
+def test_pairwise_cpl(a, b):
+    w = max(len(a), len(b))
+    sa = StringSet.from_list([a], width=w)
+    sb = StringSet.from_list([b], width=w)
+    expect = 0
+    for x, y in zip(a, b):
+        if x != y:
+            break
+        expect += 1
+    assert int(pairwise_cpl(sa.bytes, sb.bytes)[0]) == expect
+
+
+def test_group_cpl():
+    ss = StringSet.from_list([b"abcde", b"abcxx", b"abcyy"])
+    assert group_cpl(ss) == 3
+    ss2 = StringSet.from_list([b"ab", b"abc"])
+    assert group_cpl(ss2) == 2  # capped at min length
+
+
+def test_compare_to():
+    ss = StringSet.from_list([b"apple", b"banana", b"cherry"])
+    assert list(compare_to(ss, b"banana")) == [-1, 0, 1]
+
+
+def test_pack_prefix_order_preserving(rng):
+    from repro.core.strings import random_strings
+
+    keys = random_strings(rng, 200, 1, 12)
+    ss = StringSet.from_list(keys, width=16)
+    packed = pack_prefix_u64(ss.bytes)
+    order_packed = np.argsort(packed, kind="stable")
+    # packed order must agree with true order on keys differing in first 8 bytes
+    srt = sorted(range(len(keys)), key=lambda i: keys[i])
+    k_by_packed = [keys[i][:8] for i in order_packed]
+    assert k_by_packed == sorted(k_by_packed)
+
+
+def test_hash16_deterministic_and_16bit(rng):
+    from repro.core.strings import random_strings
+
+    keys = random_strings(rng, 500, 1, 30)
+    ss = StringSet.from_list(keys)
+    h1 = key_hash16(ss.bytes, ss.lens)
+    h2 = key_hash16(ss.bytes, ss.lens)
+    assert (h1 == h2).all()
+    assert (h1 < 65536).all()
+
+
+def test_nul_rejected():
+    with pytest.raises(ValueError):
+        StringSet.from_list([b"a\x00b"])

@@ -1,0 +1,68 @@
+"""End-to-end behaviour tests for the whole system (LITS + framework)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS
+from repro.core import LITSBuilder, StringSet, freeze, pad_queries, search_batch
+from repro.data.pipeline import PipelineConfig, TokenPipeline
+from repro.data.synthetic import DATASETS, load as load_dataset
+from repro.models import LMModel
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_loop import TrainConfig, train
+
+
+def test_paper_point_ops_on_all_synthetic_datasets():
+    """Bulkload + device search on every paper dataset generator (Table 1)."""
+    for name in sorted(DATASETS):
+        keys = sorted(set(load_dataset(name, 600, seed=1)))
+        b = LITSBuilder()
+        b.bulkload(StringSet.from_list(keys), np.arange(len(keys), dtype=np.int64))
+        ti = freeze(b)
+        qb, ql = pad_queries(keys, ti.width)
+        found, _, _ = search_batch(ti, jnp.asarray(qb), jnp.asarray(ql))
+        assert bool(found.all()), name
+
+
+def test_train_then_serve_roundtrip():
+    """Tiny model trains, then serves with LITS prompt caching."""
+    from repro.serve.engine import ServeEngine
+
+    r = ARCHS["h2o-danube-3-4b"].reduced()
+    m = LMModel(r)
+    pipe = TokenPipeline(PipelineConfig(vocab=r.vocab, seq_len=16, global_batch=4))
+    opt = AdamWConfig(lr=1e-3, state_dtype=jnp.float32, warmup_steps=2, total_steps=10)
+    out = train(m, pipe.batch_at, opt, TrainConfig(steps=8))
+    eng = ServeEngine(m, out["params"])
+    prompts = np.asarray(pipe.batch_at(99)["tokens"][:, :8])
+    g1 = eng.generate(prompts, n_steps=3)
+    g2 = eng.generate(prompts, n_steps=3)
+    assert np.array_equal(g1["generated"], g2["generated"])
+    assert eng.stats.cached_prefills == prompts.shape[0]
+
+
+def test_index_integrated_dedup_pipeline():
+    """Data-pipeline dedup via the LITS record store."""
+    from repro.data.pipeline import RecordStore
+
+    docs = [b"doc:%05d" % i for i in range(500)]
+    rs = RecordStore(docs)
+    incoming = docs[100:110] + [b"doc:99%03d" % i for i in range(10)]
+    fresh = rs.dedup(incoming)
+    assert fresh.sum() == 10 and not fresh[:10].any()
+
+
+def test_gpkl_hardness_ranking_mirrors_paper():
+    """Generated datasets reproduce the paper's hardness ordering trend
+    (Table 2: rands lowest GPKL; url highest)."""
+    from repro.core.gpkl import gpkl
+    from repro.core.strings import sort_order
+
+    g = {}
+    for name in ("rands", "url", "reddit", "email"):
+        keys = load_dataset(name, 1500, seed=3)
+        ss = StringSet.from_list(keys)
+        g[name] = gpkl(ss.take(sort_order(ss)))
+    assert g["rands"] < g["email"] < g["url"]
+    assert g["reddit"] < g["url"]
