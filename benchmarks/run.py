@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import argparse
 import csv
+import json
 import os
 import time
 
@@ -50,6 +51,8 @@ def main() -> None:
         "fig15": lambda: fig15_cnode.run(4000 if args.quick else 16000),
         "fig16": lambda: fig16_subtrie.run(n),
         "kernel": lambda: kernel_bench.run(1024 if args.quick else 4096),
+        "traversal": lambda: kernel_bench.run_traversal(
+            2000 if args.quick else 8000, 1024 if args.quick else 4096),
     }
     selected = args.only.split(",") if args.only else list(benches)
     print("name,us_per_call,derived")
@@ -58,6 +61,13 @@ def main() -> None:
         rows = benches[name]()
         dt = time.perf_counter() - t0
         _write_csv(rows, os.path.join(args.out, f"{name}.csv"))
+        if name == "traversal":
+            # jnp-vs-fused comparison artifact (acceptance contract): wall
+            # times + analytic per-query HBM bytes, at the repo root
+            root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+            with open(os.path.join(root, "BENCH_traversal.json"), "w") as f:
+                json.dump({"bench": "traversal", "quick": bool(args.quick),
+                           "rows": rows}, f, indent=2)
         # one summary CSV line per bench module (harness contract)
         n_rows = len(rows)
         print(f"{name},{dt * 1e6 / max(n_rows, 1):.1f},rows={n_rows};wall_s={dt:.1f}")

@@ -5,13 +5,16 @@ from .hpt import HPT, build_hpt, get_cdf_jnp, get_cdf_np64, positions_jnp, unifo
 from .pmss import PMSS, AlwaysLIT, AlwaysTrie
 from .strings import StringSet, sort_order
 from .tensor_index import (
+    SEARCH_BACKENDS,
     TensorIndex,
+    base_search,
     freeze,
     insert_batch,
     lookup_values,
     merge_delta,
     pad_queries,
     rank_batch,
+    resolve_search_backend,
     scan_batch,
     search_batch,
 )
@@ -20,7 +23,8 @@ __all__ = [
     "LITSBuilder", "LITSConfig", "HPT", "build_hpt", "uniform_hpt",
     "get_cdf_jnp", "get_cdf_np64", "positions_jnp", "gpkl", "local_gpkl", "pkl",
     "PMSS", "AlwaysLIT", "AlwaysTrie", "StringSet", "sort_order",
-    "TensorIndex", "freeze", "search_batch", "insert_batch", "lookup_values",
-    "merge_delta", "pad_queries", "rank_batch", "scan_batch",
+    "TensorIndex", "freeze", "search_batch", "base_search", "insert_batch",
+    "lookup_values", "merge_delta", "pad_queries", "rank_batch", "scan_batch",
+    "SEARCH_BACKENDS", "resolve_search_backend",
     "TAG_EMPTY", "TAG_ENTRY", "TAG_MNODE", "TAG_CNODE", "TAG_TRIE",
 ]

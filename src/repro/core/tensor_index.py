@@ -5,7 +5,8 @@ flat jax arrays) from a host :class:`~repro.core.builder.LITSBuilder`.  All
 query-side operations are single jitted functions, composable under
 ``vmap``/``pjit``/``shard_map``:
 
-* :func:`search_batch`   — paper Alg. 2, level-synchronous batched traversal
+* :func:`search_batch`   — paper Alg. 2, batched traversal (pluggable backend)
+* :func:`base_search`    — traversal + terminal resolve, no delta probe
 * :func:`rank_batch`     — ordered rank for range scans (binary search)
 * :func:`scan_batch`     — range scan windows over the frozen sort order
 * :func:`insert_batch`   — log-structured delta-buffer inserts (DESIGN.md §2)
@@ -13,11 +14,24 @@ query-side operations are single jitted functions, composable under
 
 The traversal mirrors the host builder bit-for-bit: slot positions come from
 the same float32 ``positions_impl`` the builder used at build time.
+
+Traversal backends (DESIGN.md §7)
+---------------------------------
+``search_batch``/``base_search`` take ``backend="jnp" | "pallas"``:
+
+* ``jnp``    — the level-synchronous pure-jnp reference (the bitwise oracle),
+* ``pallas`` — the fused single-kernel engine (:mod:`repro.kernels.traverse`),
+  bit-identical ``(found, eid)`` by construction (shared primitives).
+
+``backend=None`` resolves once from the ``REPRO_SEARCH_BACKEND`` environment
+variable (default ``jnp``).  String primitives live in
+:mod:`repro.kernels.strops`, shared verbatim by both backends.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
+import os
 from functools import partial
 from typing import Tuple
 
@@ -35,7 +49,16 @@ from .builder import (
     PAYLOAD_BITS,
     PAYLOAD_MASK,
 )
-from .hpt import FNV_PRIME, MAX_CDF_STEPS, get_cdf_impl, positions_impl
+from .hpt import MAX_CDF_STEPS, get_cdf_impl
+from .walk import resolve_terminal, walk_terminal
+from repro.kernels.strops import (
+    gather_bytes as _gather_bytes,
+    hash16 as _hash16,
+    hash32 as _hash32,
+    str_cmp_full as _str_cmp_full,
+    str_cmp_prefix as _str_cmp_prefix,
+    str_eq as _str_eq,
+)
 
 
 @partial(
@@ -184,7 +207,15 @@ def freeze(
 
 
 def pad_queries(keys, width: int) -> Tuple[np.ndarray, np.ndarray]:
-    """Host helper: list[bytes] -> zero-padded (B, width) uint8 + true lens (clipped to width+1)."""
+    """Host helper: list[bytes] -> zero-padded (B, width) uint8 + true lens.
+
+    Lengths are clipped to ``width + 1``: the ``width + 1`` value is an
+    over-width SENTINEL, not a length.  No stored key can have it (the host
+    builder rejects over-width keys and :func:`insert_batch` refuses them),
+    so ``_str_eq``'s length comparison makes an over-width query miss every
+    stored key — device search degrades to a clean not-found instead of
+    matching a truncated alias.
+    """
     B = len(keys)
     qb = np.zeros((B, width), np.uint8)
     ql = np.zeros(B, np.int32)
@@ -196,80 +227,13 @@ def pad_queries(keys, width: int) -> Tuple[np.ndarray, np.ndarray]:
 
 
 # ---------------------------------------------------------------------------
-# device string primitives
+# device string primitives — shared with the Pallas kernels
 # ---------------------------------------------------------------------------
-
-def _gather_bytes(pool: jax.Array, off: jax.Array, width: int) -> jax.Array:
-    idx = off[:, None] + jnp.arange(width, dtype=jnp.int32)[None, :]
-    return jnp.take(pool, idx, mode="clip")
-
-
-def _str_eq(qbytes, qlens, pool, off, klen) -> jax.Array:
-    W = qbytes.shape[1]
-    kb = _gather_bytes(pool, off, W)
-    mask = jnp.arange(W)[None, :] < klen[:, None]
-    kb = jnp.where(mask, kb, 0)
-    return jnp.all(kb == qbytes, axis=1) & (qlens == klen)
-
-
-def _str_cmp_prefix(qbytes, pool, off, pl) -> jax.Array:
-    """sign(strncmp(q, pool[off:], pl)) vectorized; q zero-padded."""
-    W = qbytes.shape[1]
-    kb = _gather_bytes(pool, off, W)
-    mask = jnp.arange(W)[None, :] < pl[:, None]
-    kv = jnp.where(mask, kb, 0).astype(jnp.int32)
-    qv = jnp.where(mask, qbytes, 0).astype(jnp.int32)
-    neq = kv != qv
-    any_neq = neq.any(axis=1)
-    first = jnp.argmax(neq, axis=1)
-    qd = jnp.take_along_axis(qv, first[:, None], axis=1)[:, 0]
-    kd = jnp.take_along_axis(kv, first[:, None], axis=1)[:, 0]
-    return jnp.sign(qd - kd) * any_neq
-
-
-def _str_cmp_full(qbytes, qlens, pool, off, klen) -> jax.Array:
-    """Full strcmp sign; equal padded bytes resolve by length."""
-    W = qbytes.shape[1]
-    kb = _gather_bytes(pool, off, W)
-    mask = jnp.arange(W)[None, :] < klen[:, None]
-    kv = jnp.where(mask, kb, 0).astype(jnp.int32)
-    qv = qbytes.astype(jnp.int32)
-    neq = kv != qv
-    any_neq = neq.any(axis=1)
-    first = jnp.argmax(neq, axis=1)
-    qd = jnp.take_along_axis(qv, first[:, None], axis=1)[:, 0]
-    kd = jnp.take_along_axis(kv, first[:, None], axis=1)[:, 0]
-    bytecmp = jnp.sign(qd - kd) * any_neq
-    lencmp = jnp.sign(qlens - klen)
-    return jnp.where(any_neq, bytecmp, lencmp)
-
-
-def _hash16(qbytes, qlens) -> jax.Array:
-    """Device mirror of strings.key_hash16 (bit-identical)."""
-    B, W = qbytes.shape
-    h = jnp.full((B,), 0x811C9DC5, jnp.uint32)
-
-    def body(k, h):
-        active = qlens > k
-        c = qbytes[:, k].astype(jnp.uint32)
-        nh = (h ^ c) * FNV_PRIME
-        return jnp.where(active, nh, h)
-
-    h = jax.lax.fori_loop(0, W, body, h)
-    return ((h ^ (h >> jnp.uint32(16))) & jnp.uint32(0xFFFF)).astype(jnp.int32)
-
-
-def _hash32(qbytes, qlens) -> jax.Array:
-    B, W = qbytes.shape
-    h = jnp.full((B,), 0x811C9DC5, jnp.uint32)
-
-    def body(k, h):
-        active = qlens > k
-        c = qbytes[:, k].astype(jnp.uint32)
-        nh = (h ^ c) * FNV_PRIME
-        return jnp.where(active, nh, h)
-
-    return jax.lax.fori_loop(0, W, body, h)
+# ``_gather_bytes``/``_str_eq``/``_str_cmp_prefix``/``_str_cmp_full``/
+# ``_hash16``/``_hash32`` are imported from :mod:`repro.kernels.strops` (see
+# module docstring): one implementation serves the jnp reference backend and
+# the fused Pallas traversal kernel, which is what makes backend equivalence
+# a bit-exact identity rather than a tolerance.
 
 
 def _tag(item: jax.Array) -> jax.Array:
@@ -285,82 +249,26 @@ def _payload(item: jax.Array) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def _traverse(ti: TensorIndex, qbytes: jax.Array, qlens: jax.Array) -> jax.Array:
-    """Run the tagged-handle walk until every query sits on a terminal item."""
-    B = qbytes.shape[0]
-    item0 = jnp.broadcast_to(ti.root_item, (B,)).astype(jnp.int32)
-
-    def cond(state):
-        i, item = state
-        tag = _tag(item)
-        return (i < ti.max_iters) & jnp.any((tag == TAG_MNODE) | (tag == TAG_TRIE))
-
-    def body(state):
-        i, item = state
-        tag = _tag(item)
-        pay = _payload(item)
-        # ---- model-based node step (paper Alg. 2 `locate`) ----
-        nid = jnp.minimum(pay, ti.mn_slot_base.shape[0] - 1)
-        pl = jnp.take(ti.mn_prefix_len, nid)
-        poff = jnp.take(ti.mn_prefix_off, nid)
-        m = jnp.take(ti.mn_slot_cnt, nid)
-        base = jnp.take(ti.mn_slot_base, nid)
-        cmp = _str_cmp_prefix(qbytes, ti.key_bytes, poff, pl)
-        pos = positions_impl(
-            ti.cdf_tab, ti.prob_tab, qbytes, qlens, pl,
-            jnp.take(ti.mn_alpha, nid), jnp.take(ti.mn_beta, nid), m,
-            max_steps=ti.cdf_steps,  # §Perf H3: walk only as far as the
-        )                            # longest mnode suffix actually stored
-        pos = jnp.where(cmp < 0, 0, jnp.where(cmp > 0, m - 1, pos))
-        mnext = jnp.take(ti.items, jnp.minimum(base + pos, ti.items.shape[0] - 1))
-        # ---- critbit subtrie step ----
-        tid = jnp.minimum(pay, ti.tr_byte.shape[0] - 1)
-        cb = jnp.take(ti.tr_byte, tid)
-        mk = jnp.take(ti.tr_mask, tid)
-        qc = jnp.take_along_axis(qbytes, jnp.minimum(cb, ti.width - 1)[:, None], axis=1)[:, 0]
-        qc = jnp.where(cb < jnp.minimum(qlens, ti.width), qc.astype(jnp.int32), 0)
-        bit = (qc & mk) != 0
-        tnext = jnp.where(bit, jnp.take(ti.tr_right, tid), jnp.take(ti.tr_left, tid))
-        item = jnp.where(tag == TAG_MNODE, mnext, jnp.where(tag == TAG_TRIE, tnext, item))
-        return i + 1, item
-
-    _, item = jax.lax.while_loop(cond, body, (jnp.int32(0), item0))
+    """Tagged-handle walk to terminal items (shared impl: core.walk)."""
+    item, _levels = walk_terminal(
+        qbytes, qlens, ti.root_item,
+        ti.items, ti.mn_slot_base, ti.mn_slot_cnt, ti.mn_prefix_off,
+        ti.mn_prefix_len, ti.mn_alpha, ti.mn_beta,
+        ti.tr_byte, ti.tr_mask, ti.tr_left, ti.tr_right,
+        ti.key_bytes, ti.cdf_tab, ti.prob_tab,
+        width=ti.width, max_iters=ti.max_iters, cdf_steps=ti.cdf_steps,
+    )
     return item
 
 
 def _resolve_terminal(ti: TensorIndex, qbytes, qlens, item):
-    """EMPTY/ENTRY/CNODE -> (found, eid)."""
-    tag = _tag(item)
-    pay = _payload(item)
-    # ENTRY
-    eid = jnp.minimum(pay, ti.ent_off.shape[0] - 1)
-    ent_ok = (tag == TAG_ENTRY) & _str_eq(
-        qbytes, qlens, ti.key_bytes, jnp.take(ti.ent_off, eid), jnp.take(ti.ent_len, eid)
+    """EMPTY/ENTRY/CNODE -> (found, eid) (shared impl: core.walk)."""
+    return resolve_terminal(
+        qbytes, qlens, item,
+        ti.cn_base, ti.cn_cnt, ti.ch_hash, ti.ch_ent,
+        ti.key_bytes, ti.ent_off, ti.ent_len,
+        cnode_cap=ti.cnode_cap,
     )
-    # CNODE: scan up to cnode_cap h-pointers, dereference on 16-bit hash match
-    cid = jnp.minimum(pay, ti.cn_base.shape[0] - 1)
-    base = jnp.take(ti.cn_base, cid)
-    cnt = jnp.take(ti.cn_cnt, cid)
-    qh = _hash16(qbytes, qlens)
-
-    def cbody(j, carry):
-        found, feid = carry
-        sidx = jnp.minimum(base + j, ti.ch_hash.shape[0] - 1)
-        h = jnp.take(ti.ch_hash, sidx)
-        cand = jnp.take(ti.ch_ent, sidx)
-        ce = jnp.minimum(cand, ti.ent_off.shape[0] - 1)
-        hmatch = (j < cnt) & (h == qh) & (tag == TAG_CNODE)
-        eq = hmatch & _str_eq(
-            qbytes, qlens, ti.key_bytes, jnp.take(ti.ent_off, ce), jnp.take(ti.ent_len, ce)
-        )
-        take = eq & ~found
-        return found | eq, jnp.where(take, cand, feid)
-
-    cfound, ceid = jax.lax.fori_loop(
-        0, ti.cnode_cap, cbody, (jnp.zeros(qbytes.shape[0], bool), jnp.zeros(qbytes.shape[0], jnp.int32))
-    )
-    found = ent_ok | cfound
-    out_eid = jnp.where(ent_ok, eid, jnp.where(cfound, ceid, -1))
-    return found, out_eid
 
 
 def _delta_lookup(ti: TensorIndex, qbytes, qlens):
@@ -387,15 +295,71 @@ def _delta_lookup(ti: TensorIndex, qbytes, qlens):
     )
 
 
-@jax.jit
-def search_batch(ti: TensorIndex, qbytes: jax.Array, qlens: jax.Array):
-    """Batched point lookup. Returns (found, eid, is_delta)."""
-    dfound, did = _delta_lookup(ti, qbytes, qlens)
+# ---------------------------------------------------------------------------
+# pluggable traversal backend (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+SEARCH_BACKENDS = ("jnp", "pallas")
+
+
+def resolve_search_backend(backend: str | None = None) -> str:
+    """Resolve the traversal backend: explicit arg > env > ``"jnp"``.
+
+    ``jnp`` is the bitwise-reference oracle; ``pallas`` is the fused
+    single-kernel engine.  Set ``REPRO_SEARCH_BACKEND=pallas`` to switch a
+    whole process (serving containers, benchmarks) without code edits.
+    """
+    if backend is None:
+        backend = os.environ.get("REPRO_SEARCH_BACKEND", "jnp").strip().lower() or "jnp"
+    if backend not in SEARCH_BACKENDS:
+        raise ValueError(
+            f"unknown traversal backend {backend!r}; expected one of {SEARCH_BACKENDS}")
+    return backend
+
+
+def base_search_impl(ti: TensorIndex, qbytes, qlens, backend: str = "jnp"):
+    """Traversal + terminal resolve over the frozen base index (no delta probe).
+
+    Traceable (usable inside jit / shard_map); ``backend`` must already be
+    resolved to a concrete value.  Both backends return bit-identical
+    ``(found, eid)`` — the contract tested in tests/test_kernels.py.
+    """
+    if backend == "pallas":
+        from repro.kernels import ops as _kops  # lazy: keeps core import light
+
+        found, eid, _levels = _kops.fused_search(ti, qbytes, qlens)
+        return found, eid
     item = _traverse(ti, qbytes, qlens)
-    bfound, beid = _resolve_terminal(ti, qbytes, qlens, item)
+    return _resolve_terminal(ti, qbytes, qlens, item)
+
+
+@partial(jax.jit, static_argnames=("backend",))
+def base_search(ti: TensorIndex, qbytes: jax.Array, qlens: jax.Array,
+                backend: str = "jnp"):
+    """Jitted :func:`base_search_impl` (snapshot search, delta skipped)."""
+    return base_search_impl(ti, qbytes, qlens, backend)
+
+
+@partial(jax.jit, static_argnames=("backend",))
+def _search_batch_jit(ti: TensorIndex, qbytes: jax.Array, qlens: jax.Array,
+                      backend: str):
+    dfound, did = _delta_lookup(ti, qbytes, qlens)
+    bfound, beid = base_search_impl(ti, qbytes, qlens, backend)
     found = dfound | bfound
     eid = jnp.where(dfound, did, beid)
     return found, eid, dfound
+
+
+def search_batch(ti: TensorIndex, qbytes: jax.Array, qlens: jax.Array,
+                 *, backend: str | None = None):
+    """Batched point lookup. Returns (found, eid, is_delta).
+
+    ``backend`` picks the traversal engine (``"jnp"`` reference or fused
+    ``"pallas"`` kernel); ``None`` resolves from ``REPRO_SEARCH_BACKEND``.
+    The delta-buffer probe always runs on the jnp path (mutable state stays
+    outside the kernel).
+    """
+    return _search_batch_jit(ti, qbytes, qlens, resolve_search_backend(backend))
 
 
 @jax.jit
@@ -465,6 +429,15 @@ def insert_batch(ti: TensorIndex, kbytes: jax.Array, klens: jax.Array,
 
     Keys already in the base index get a value update; new keys go to the
     delta buffer.  Returns (new_ti, inserted_mask, updated_mask).
+
+    Keys longer than the index width (``klens > width``, the ``pad_queries``
+    truncation sentinel) are REJECTED rather than stored truncated: a
+    truncated alias would hash/compare equal to every other long key sharing
+    its first ``width`` bytes and would corrupt :func:`merge_delta` (which
+    replays the stored byte length).  This mirrors the host builder, where
+    ``LITSBuilder.insert`` raises for over-width keys.  Byte-pool capacity is
+    gated on the key's true length ``kl`` (not the padded width), so inserts
+    that fit are no longer spuriously rejected near a full pool.
     """
     B, W = kbytes.shape
     item = _traverse(ti, kbytes, klens)
@@ -494,7 +467,12 @@ def insert_batch(ti: TensorIndex, kbytes: jax.Array, klens: jax.Array,
             free = de < 0
             dei = jnp.maximum(de, 0)
             key_eq = (~free) & (jnp.take(de_hash, dei) == h)
-            kb2 = jax.lax.dynamic_slice(db_bytes, (jnp.take(de_off, dei),), (W,))
+            # gather (not dynamic_slice): a tail entry whose W-window would
+            # poke past the pool must not silently shift its read offset
+            off2 = jnp.take(de_off, dei)
+            kb2 = jnp.take(
+                db_bytes,
+                jnp.minimum(off2 + jnp.arange(W, dtype=jnp.int32), dbcap - 1))
             klen2 = jnp.take(de_len, dei)
             mask = jnp.arange(W) < klen2
             key_eq = key_eq & jnp.all(jnp.where(mask, kb2, 0) == kb) & (klen2 == kl)
@@ -508,16 +486,19 @@ def insert_batch(ti: TensorIndex, kbytes: jax.Array, klens: jax.Array,
         mde = jnp.maximum(match_de, 0)
         de_vlo = de_vlo.at[mde].set(jnp.where(is_update_delta, vlo, jnp.take(de_vlo, mde)))
         de_vhi = de_vhi.at[mde].set(jnp.where(is_update_delta, vhi, jnp.take(de_vhi, mde)))
-        can = (~in_base) & (~is_update_delta) & (fslot >= 0) \
-            & (de_count < dcap) & (db_used + W <= dbcap)
-        this_overflow = (~in_base) & (~is_update_delta) & ~can
+        fits = kl <= W  # over-width keys are unrepresentable: reject, don't truncate
+        can = fits & (~in_base) & (~is_update_delta) & (fslot >= 0) \
+            & (de_count < dcap) & (db_used + kl <= dbcap)
+        this_overflow = fits & (~in_base) & (~is_update_delta) & ~can
         # claim
         did = jnp.where(can, de_count, 0)
         dh_slot = dh_slot.at[jnp.where(can, fslot, hcap)].set(did, mode="drop")
         woff = jnp.where(can, db_used, 0)
-        patch = jax.lax.dynamic_slice(db_bytes, (woff,), (W,))
-        patch = jnp.where(can, kb, patch)
-        db_bytes = jax.lax.dynamic_update_slice(db_bytes, patch, (woff,))
+        # scatter exactly kl live bytes: a W-wide window write would clamp at
+        # the pool tail and corrupt earlier entries once db_used > dbcap - W
+        wj = jnp.arange(W, dtype=jnp.int32)
+        widx = jnp.where((wj < kl) & can, woff + wj, dbcap)
+        db_bytes = db_bytes.at[widx].set(kb, mode="drop")
         de_off = de_off.at[did].set(jnp.where(can, woff, jnp.take(de_off, did)))
         de_len = de_len.at[did].set(jnp.where(can, kl, jnp.take(de_len, did)))
         de_vlo = de_vlo.at[did].set(jnp.where(can, vlo, jnp.take(de_vlo, did)))

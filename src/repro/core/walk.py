@@ -1,0 +1,138 @@
+"""The Alg. 2 walk over flat pools — ONE implementation for both backends.
+
+``walk_terminal`` (tagged dispatch + HPT-CDF locate + critbit step, with the
+early-exit convergence loop and per-query level counter) and
+``resolve_terminal`` (ENTRY string-equality + cnode h-pointer probe) operate
+on flat arrays, so the exact same traced code runs
+
+* in the jnp reference backend (:mod:`repro.core.tensor_index` unpacks the
+  ``TensorIndex`` pytree), and
+* inside the fused Pallas kernel body (:mod:`repro.kernels.traverse` loads
+  the same pools from VMEM refs).
+
+This is what makes the backend bit-identity contract (DESIGN.md §7)
+structural: there is no second copy of the traversal to drift.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .builder import (
+    PAYLOAD_BITS,
+    PAYLOAD_MASK,
+    TAG_CNODE,
+    TAG_ENTRY,
+    TAG_MNODE,
+    TAG_TRIE,
+)
+from .hpt import positions_impl
+from repro.kernels.strops import hash16, str_cmp_prefix, str_eq
+
+
+def item_tag(item: jax.Array) -> jax.Array:
+    return jax.lax.shift_right_logical(item, PAYLOAD_BITS) & 0x7
+
+
+def item_payload(item: jax.Array) -> jax.Array:
+    return item & PAYLOAD_MASK
+
+
+def walk_terminal(
+    qbytes, qlens, root_item,
+    items, mn_slot_base, mn_slot_cnt, mn_prefix_off, mn_prefix_len,
+    mn_alpha, mn_beta, tr_byte, tr_mask, tr_left, tr_right,
+    key_bytes, cdf_tab, prob_tab,
+    *, width: int, max_iters: int, cdf_steps: int,
+):
+    """Run the tagged-handle walk until every query sits on a terminal item.
+
+    Returns ``(item, levels)`` — the terminal item per query and the number
+    of levels each query stayed active (roofline accounting).  The
+    ``while_loop`` exits as soon as no query is on a MNODE/TRIE, so a
+    converged batch stops paying per-level cost.
+    """
+    B = qbytes.shape[0]
+    item0 = jnp.broadcast_to(root_item, (B,)).astype(jnp.int32)
+
+    def cond(state):
+        i, item, _ = state
+        tag = item_tag(item)
+        return (i < max_iters) & jnp.any((tag == TAG_MNODE) | (tag == TAG_TRIE))
+
+    def body(state):
+        i, item, levels = state
+        tag = item_tag(item)
+        pay = item_payload(item)
+        active = (tag == TAG_MNODE) | (tag == TAG_TRIE)
+        # ---- model-based node step (paper Alg. 2 `locate`) ----
+        nid = jnp.minimum(pay, mn_slot_base.shape[0] - 1)
+        pl = jnp.take(mn_prefix_len, nid)
+        poff = jnp.take(mn_prefix_off, nid)
+        m = jnp.take(mn_slot_cnt, nid)
+        base = jnp.take(mn_slot_base, nid)
+        cmp = str_cmp_prefix(qbytes, key_bytes, poff, pl)
+        pos = positions_impl(
+            cdf_tab, prob_tab, qbytes, qlens, pl,
+            jnp.take(mn_alpha, nid), jnp.take(mn_beta, nid), m,
+            max_steps=cdf_steps,  # §Perf H3: walk only as far as the
+        )                         # longest mnode suffix actually stored
+        pos = jnp.where(cmp < 0, 0, jnp.where(cmp > 0, m - 1, pos))
+        mnext = jnp.take(items, jnp.minimum(base + pos, items.shape[0] - 1))
+        # ---- critbit subtrie step ----
+        tid = jnp.minimum(pay, tr_byte.shape[0] - 1)
+        cb = jnp.take(tr_byte, tid)
+        mk = jnp.take(tr_mask, tid)
+        qc = jnp.take_along_axis(
+            qbytes, jnp.minimum(cb, width - 1)[:, None], axis=1)[:, 0]
+        qc = jnp.where(cb < jnp.minimum(qlens, width), qc.astype(jnp.int32), 0)
+        bit = (qc & mk) != 0
+        tnext = jnp.where(bit, jnp.take(tr_right, tid), jnp.take(tr_left, tid))
+        item = jnp.where(tag == TAG_MNODE, mnext,
+                         jnp.where(tag == TAG_TRIE, tnext, item))
+        return i + 1, item, levels + active.astype(jnp.int32)
+
+    _, item, levels = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), item0, jnp.zeros((B,), jnp.int32)))
+    return item, levels
+
+
+def resolve_terminal(
+    qbytes, qlens, item,
+    cn_base, cn_cnt, ch_hash, ch_ent, key_bytes, ent_off, ent_len,
+    *, cnode_cap: int,
+):
+    """EMPTY/ENTRY/CNODE terminal item -> (found, eid)."""
+    tag = item_tag(item)
+    pay = item_payload(item)
+    # ENTRY
+    eid = jnp.minimum(pay, ent_off.shape[0] - 1)
+    ent_ok = (tag == TAG_ENTRY) & str_eq(
+        qbytes, qlens, key_bytes, jnp.take(ent_off, eid), jnp.take(ent_len, eid)
+    )
+    # CNODE: scan up to cnode_cap h-pointers, dereference on 16-bit hash match
+    cid = jnp.minimum(pay, cn_base.shape[0] - 1)
+    base = jnp.take(cn_base, cid)
+    cnt = jnp.take(cn_cnt, cid)
+    qh = hash16(qbytes, qlens)
+
+    def cbody(j, carry):
+        found, feid = carry
+        sidx = jnp.minimum(base + j, ch_hash.shape[0] - 1)
+        h = jnp.take(ch_hash, sidx)
+        cand = jnp.take(ch_ent, sidx)
+        ce = jnp.minimum(cand, ent_off.shape[0] - 1)
+        hmatch = (j < cnt) & (h == qh) & (tag == TAG_CNODE)
+        eq = hmatch & str_eq(
+            qbytes, qlens, key_bytes, jnp.take(ent_off, ce), jnp.take(ent_len, ce)
+        )
+        take = eq & ~found
+        return found | eq, jnp.where(take, cand, feid)
+
+    B = qbytes.shape[0]
+    cfound, ceid = jax.lax.fori_loop(
+        0, cnode_cap, cbody, (jnp.zeros((B,), bool), jnp.zeros((B,), jnp.int32))
+    )
+    found = ent_ok | cfound
+    out_eid = jnp.where(ent_ok, eid, jnp.where(cfound, ceid, -1))
+    return found, out_eid

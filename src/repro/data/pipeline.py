@@ -64,20 +64,23 @@ class RecordStore:
     """String-keyed document store backed by LITS (paper integration point)."""
 
     def __init__(self, keys: List[bytes], payloads: Optional[np.ndarray] = None,
-                 **builder_kw):
+                 backend: Optional[str] = None, **builder_kw):
         self.builder = LITSBuilder(**builder_kw)
         vals = np.arange(len(keys), dtype=np.int64) if payloads is None else payloads
         self._payload_is_rowid = payloads is None
         ss = StringSet.from_list(keys)
         self.builder.bulkload(ss, vals)
         self.index = freeze(self.builder)
+        # traversal backend (DESIGN.md §7): None -> REPRO_SEARCH_BACKEND env
+        self.backend = backend
 
     def lookup_batch(self, keys: List[bytes]):
         """Batched device lookup: returns (found mask, row ids)."""
         import jax.numpy as jnp
 
         qb, ql = pad_queries(keys, self.index.width)
-        found, eid, isd = search_batch(self.index, jnp.asarray(qb), jnp.asarray(ql))
+        found, eid, isd = search_batch(
+            self.index, jnp.asarray(qb), jnp.asarray(ql), backend=self.backend)
         return np.asarray(found), np.asarray(eid)
 
     def dedup(self, keys: List[bytes]) -> np.ndarray:

@@ -30,11 +30,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import LITSBuilder, StringSet, freeze, search_batch, lookup_values
+from repro.core import LITSBuilder, StringSet, freeze, lookup_values
 from repro.core.hpt import get_cdf_impl
-from repro.core.tensor_index import _resolve_terminal, _traverse
 from repro.core.strings import sort_order
-from repro.core.tensor_index import TensorIndex
+from repro.core.tensor_index import (
+    TensorIndex, base_search_impl, resolve_search_backend,
+)
 
 BOUNDARY_EPS = 1e-6
 
@@ -128,18 +129,21 @@ def _slice_shard(stacked: TensorIndex, s) -> TensorIndex:
 
 
 def make_service_fn(sidx: ShardedIndex, mesh, axis: str = "data",
-                    per_dest_capacity: int = 256, shard_axes=None):
+                    per_dest_capacity: int = 256, shard_axes=None,
+                    backend: str | None = None):
     """Returns a jitted shard_map fn: (qbytes, qlens) -> (found, lo, hi, overflow).
 
     ``axis`` is the partition axis of the index (all_to_all routing axis);
     ``shard_axes`` (default: just ``axis``) are the mesh axes the *query rows*
     are sharded over — extra axes act as serving replicas (the index is
-    replicated across them).
+    replicated across them).  ``backend`` selects the local traversal engine
+    (DESIGN.md §7); ``None`` resolves from ``REPRO_SEARCH_BACKEND``.
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
     shard_axes = (axis,) if shard_axes is None else tuple(shard_axes)
+    backend = resolve_search_backend(backend)
 
     n = sidx.n_shards
     C = per_dest_capacity
@@ -170,8 +174,7 @@ def make_service_fn(sidx: ShardedIndex, mesh, axis: str = "data",
         rl = recvl.reshape(n * C)
         # §Perf H3: serving snapshots are immutable — skip the delta-buffer
         # probe (16 hash probes x W-byte compares per query in search_batch).
-        item = _traverse(ti, rq, rl)
-        found, eid = _resolve_terminal(ti, rq, rl, item)
+        found, eid = base_search_impl(ti, rq, rl, backend)
         lo, hi = lookup_values(ti, eid, jnp.zeros_like(found))
         found = found & (rl > 0)
         # send results home

@@ -1,15 +1,34 @@
 """Pallas TPU kernels for the LITS hot paths.
 
+* ``traverse``    — the FUSED traversal engine: the whole Alg. 2 walk
+                    (dispatch + locate + subtrie + cnode probe + resolve)
+                    in one kernel with early-exit convergence (DESIGN.md §7).
 * ``hpt_cdf``     — batched HPT GetCDF (paper Alg. 1); HPT resident in VMEM;
                     ``gather`` and one-hot ``onehot`` MXU variants.
 * ``hpt_locate``  — fused CDF walk + per-node linear model + slot clamp
                     (paper Alg. 2 l.35-37).
 * ``cnode_probe`` — vectorized 16-bit h-pointer hash probe (the paper's
                     AVX-512 experiment, App. A.7, mapped to VPU lanes).
+* ``strops``      — shared jnp string primitives (gather/eq/cmp/hash) used by
+                    BOTH the jnp reference backend and the Pallas kernels.
 
-``ops.py`` holds the jit'd wrappers (interpret=True off-TPU); ``ref.py`` the
-pure-jnp oracles every kernel is validated against bit-exactly.
+``ops.py`` holds the jit'd wrappers (interpret resolved once per process,
+``REPRO_KERNEL_BACKEND`` override); ``ref.py`` the pure-jnp oracles every
+kernel is validated against bit-exactly.
+
+Submodules load lazily so that ``repro.core`` can import the leaf
+``strops`` module without pulling the full Pallas stack at import time.
 """
-from . import ops, ref
+from __future__ import annotations
 
-__all__ = ["ops", "ref"]
+import importlib
+
+__all__ = ["ops", "ref", "strops", "traverse"]
+
+
+def __getattr__(name: str):
+    if name in __all__:
+        mod = importlib.import_module(f".{name}", __name__)
+        globals()[name] = mod
+        return mod
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.hpt import FNV_PRIME
+from .strops import FNV_PRIME
 
 DEFAULT_BLOCK_B = 256
 

@@ -1,10 +1,23 @@
 """Jit'd public wrappers for the Pallas kernels.
 
 On CPU (this container) the kernels execute in ``interpret=True`` mode; on a
-real TPU backend they compile natively.  ``interpret`` is resolved once from
-the default backend unless overridden.
+real TPU backend they compile natively.  ``interpret`` is resolved ONCE per
+process (cached) from the default backend, overridable without code edits via
+the ``REPRO_KERNEL_BACKEND`` environment variable:
+
+* ``REPRO_KERNEL_BACKEND=interpret`` — force interpreter mode (CPU containers,
+  debugging on TPU),
+* ``REPRO_KERNEL_BACKEND=native``    — force native Mosaic compilation,
+* unset / ``auto``                   — interpret unless ``jax.default_backend()``
+  is ``tpu``.
+
+Tests that need to flip the mode mid-process call
+``_interpret_default.cache_clear()`` after changing the env var.
 """
 from __future__ import annotations
+
+import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -12,9 +25,19 @@ import jax.numpy as jnp
 from .cnode_probe import cnode_probe_pallas
 from .hpt_cdf import hpt_cdf_pallas
 from .hpt_locate import hpt_locate_pallas
+from .traverse import fused_search_pallas
 
 
+@functools.lru_cache(maxsize=1)
 def _interpret_default() -> bool:
+    mode = os.environ.get("REPRO_KERNEL_BACKEND", "auto").strip().lower()
+    if mode in ("interpret", "cpu"):
+        return True
+    if mode in ("native", "mosaic", "tpu"):
+        return False
+    if mode not in ("", "auto"):
+        raise ValueError(
+            f"REPRO_KERNEL_BACKEND={mode!r}: expected auto|interpret|native")
     return jax.default_backend() != "tpu"
 
 
@@ -48,5 +71,25 @@ def cnode_probe(hashes, qhash, cnt, frm=None, *, block_b: int = 512,
     """First matching h-pointer slot per query (or -1)."""
     return cnode_probe_pallas(
         hashes, qhash, cnt, frm, block_b=block_b,
+        interpret=_interpret_default() if interpret is None else interpret,
+    )
+
+
+def fused_search(ti, qbytes, qlens, *, block_b: int = 256,
+                 interpret: bool | None = None):
+    """Whole-walk fused traversal over a :class:`~repro.core.tensor_index.TensorIndex`.
+
+    Returns ``(found, eid, levels)`` — bit-identical to the jnp reference
+    (DESIGN.md §7), excluding the delta buffer (that probe stays host-side
+    jnp in ``search_batch``).  ``ti`` is duck-typed to avoid a core import.
+    """
+    return fused_search_pallas(
+        qbytes, jnp.asarray(qlens, jnp.int32), ti.root_item, ti.items,
+        ti.mn_slot_base, ti.mn_slot_cnt, ti.mn_prefix_off, ti.mn_prefix_len,
+        ti.mn_alpha, ti.mn_beta, ti.tr_byte, ti.tr_mask, ti.tr_left,
+        ti.tr_right, ti.cn_base, ti.cn_cnt, ti.ch_hash, ti.ch_ent,
+        ti.key_bytes, ti.ent_off, ti.ent_len, ti.cdf_tab, ti.prob_tab,
+        width=ti.width, max_iters=ti.max_iters, cnode_cap=ti.cnode_cap,
+        cdf_steps=ti.cdf_steps, block_b=block_b,
         interpret=_interpret_default() if interpret is None else interpret,
     )

@@ -1,0 +1,106 @@
+"""Shared device string primitives (jnp) used by BOTH traversal backends.
+
+These functions are plain jnp and trace identically inside a jitted host
+program and inside a Pallas kernel body (interpret or native), so the
+pure-jnp reference path in :mod:`repro.core.tensor_index` and the fused
+Pallas kernel in :mod:`repro.kernels.traverse` literally share one
+implementation — the backend-equivalence contract (DESIGN.md §7) reduces
+to "same code, same op order".
+
+Hash semantics contract
+-----------------------
+``hash16``/``hash32`` consume exactly ``min(len, width)`` bytes, where
+``width`` is the padded matrix width.  The host mirror
+(:func:`repro.core.strings.key_hash16`) has identical semantics for any
+matrix of the same width, so build-time h-pointer hashes and query-time
+hashes are bit-identical.  Keys longer than the index width are NOT
+representable (``pad_queries`` marks them with the ``width+1`` length
+sentinel and ``insert_batch`` rejects them), so a stored hash never covers
+truncated bytes.
+
+This module must stay a leaf import: no ``repro.core`` imports here
+(``repro.core.tensor_index`` imports us).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# FNV-1a constants — the single authoritative definition for device code.
+# (`repro.core.hpt.FNV_PRIME` is the same value; kernels import from here to
+# keep the kernels package free of core imports.)
+FNV_PRIME = np.uint32(0x01000193)
+FNV_OFFSET = np.uint32(0x811C9DC5)
+
+
+def gather_bytes(pool: jax.Array, off: jax.Array, width: int) -> jax.Array:
+    """(B,) offsets -> (B, width) byte windows from a flat pool (clamped)."""
+    idx = off[:, None] + jnp.arange(width, dtype=jnp.int32)[None, :]
+    return jnp.take(pool, idx, mode="clip")
+
+
+def str_eq(qbytes, qlens, pool, off, klen) -> jax.Array:
+    """Exact string equality: bytes AND length must match."""
+    W = qbytes.shape[1]
+    kb = gather_bytes(pool, off, W)
+    mask = jnp.arange(W)[None, :] < klen[:, None]
+    kb = jnp.where(mask, kb, 0)
+    return jnp.all(kb == qbytes, axis=1) & (qlens == klen)
+
+
+def str_cmp_prefix(qbytes, pool, off, pl) -> jax.Array:
+    """sign(strncmp(q, pool[off:], pl)) vectorized; q zero-padded."""
+    W = qbytes.shape[1]
+    kb = gather_bytes(pool, off, W)
+    mask = jnp.arange(W)[None, :] < pl[:, None]
+    kv = jnp.where(mask, kb, 0).astype(jnp.int32)
+    qv = jnp.where(mask, qbytes, 0).astype(jnp.int32)
+    neq = kv != qv
+    any_neq = neq.any(axis=1)
+    first = jnp.argmax(neq, axis=1)
+    qd = jnp.take_along_axis(qv, first[:, None], axis=1)[:, 0]
+    kd = jnp.take_along_axis(kv, first[:, None], axis=1)[:, 0]
+    return jnp.sign(qd - kd) * any_neq
+
+
+def str_cmp_full(qbytes, qlens, pool, off, klen) -> jax.Array:
+    """Full strcmp sign; equal padded bytes resolve by length."""
+    W = qbytes.shape[1]
+    kb = gather_bytes(pool, off, W)
+    mask = jnp.arange(W)[None, :] < klen[:, None]
+    kv = jnp.where(mask, kb, 0).astype(jnp.int32)
+    qv = qbytes.astype(jnp.int32)
+    neq = kv != qv
+    any_neq = neq.any(axis=1)
+    first = jnp.argmax(neq, axis=1)
+    qd = jnp.take_along_axis(qv, first[:, None], axis=1)[:, 0]
+    kd = jnp.take_along_axis(kv, first[:, None], axis=1)[:, 0]
+    bytecmp = jnp.sign(qd - kd) * any_neq
+    lencmp = jnp.sign(qlens - klen)
+    return jnp.where(any_neq, bytecmp, lencmp)
+
+
+def _fnv1a(qbytes, qlens) -> jax.Array:
+    """Rolling FNV-1a over min(len, width) bytes of each padded row."""
+    B, W = qbytes.shape
+    h = jnp.full((B,), FNV_OFFSET, jnp.uint32)
+
+    def body(k, h):
+        active = qlens > k
+        c = qbytes[:, k].astype(jnp.uint32)
+        nh = (h ^ c) * FNV_PRIME
+        return jnp.where(active, nh, h)
+
+    return jax.lax.fori_loop(0, W, body, h)
+
+
+def hash16(qbytes, qlens) -> jax.Array:
+    """Device mirror of strings.key_hash16 (bit-identical, same width)."""
+    h = _fnv1a(qbytes, qlens)
+    return ((h ^ (h >> jnp.uint32(16))) & jnp.uint32(0xFFFF)).astype(jnp.int32)
+
+
+def hash32(qbytes, qlens) -> jax.Array:
+    """Full 32-bit rolling hash (delta-buffer hash table)."""
+    return _fnv1a(qbytes, qlens)

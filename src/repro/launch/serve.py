@@ -11,6 +11,7 @@ import time
 import jax
 import numpy as np
 
+from repro.configs.base import IndexRuntimeConfig
 from repro.configs.registry import get_arch
 from repro.models import LMModel
 from repro.serve.engine import ServeEngine
@@ -35,7 +36,8 @@ def main() -> None:
         raise SystemExit(f"{cfg.name} is encoder-only: no decode path")
     model = LMModel(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    eng = ServeEngine(model, params)
+    runtime = IndexRuntimeConfig.from_env().validate()
+    eng = ServeEngine(model, params, index_backend=runtime.search_backend)
     rng = np.random.default_rng(0)
     base = rng.integers(0, cfg.vocab, size=(args.batch, args.prompt_len)).astype(np.int32)
     t0 = time.time()

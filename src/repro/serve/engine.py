@@ -24,10 +24,14 @@ class ServeStats:
 class ServeEngine:
     """Greedy batched decoding with exact-prefix KV reuse via LITS."""
 
-    def __init__(self, model: LMModel, params, cache_capacity: int = 1024):
+    def __init__(self, model: LMModel, params, cache_capacity: int = 1024,
+                 index_backend: Optional[str] = None):
         self.model = model
         self.params = params
-        self.prefix_cache = PrefixCache(capacity=cache_capacity)
+        # index_backend: LITS traversal backend for prompt-cache lookups
+        # ("jnp" | "pallas" | None -> REPRO_SEARCH_BACKEND, DESIGN.md §7)
+        self.prefix_cache = PrefixCache(capacity=cache_capacity,
+                                        backend=index_backend)
         self.prefill_fn = jax.jit(model.prefill, static_argnames=("max_len",))
         self.decode_fn = jax.jit(model.decode_step)
         self.max_len = 512

@@ -37,19 +37,23 @@ class PrefixCacheStats:
 class PrefixCache:
     """Exact-match prompt -> slot id, LITS-indexed."""
 
-    def __init__(self, capacity: int = 4096, width: int = 256, seed_keys=None):
+    def __init__(self, capacity: int = 4096, width: int = 256, seed_keys=None,
+                 backend: Optional[str] = None):
         self.builder = LITSBuilder()
         seed = seed_keys or [b"\x01<prefix-cache-sentinel>"]
         self.builder.bulkload(StringSet.from_list(seed, width=width), width=width)
         self.index = freeze(self.builder, delta_capacity=capacity)
         self.store: Dict[int, object] = {}
         self._next_slot = 0
+        # traversal backend (DESIGN.md §7): None -> REPRO_SEARCH_BACKEND env
+        self.backend = backend
         self.stats = PrefixCacheStats()
 
     def lookup(self, prompts: List[bytes]) -> Tuple[np.ndarray, np.ndarray]:
         """Returns (hit mask, slot ids)."""
         qb, ql = pad_queries(prompts, self.index.width)
-        found, eid, isd = search_batch(self.index, jnp.asarray(qb), jnp.asarray(ql))
+        found, eid, isd = search_batch(
+            self.index, jnp.asarray(qb), jnp.asarray(ql), backend=self.backend)
         lo, hi = lookup_values(self.index, eid, isd)
         slots = np.asarray(lo)
         found = np.asarray(found)
@@ -59,7 +63,13 @@ class PrefixCache:
         return found, np.where(found, slots, -1)
 
     def admit(self, prompts: List[bytes], states: List[object]) -> np.ndarray:
-        """Insert prompt->state pairs; returns assigned slot ids."""
+        """Insert prompt->state pairs; returns assigned slot ids (-1 = refused).
+
+        ``insert_batch`` can refuse a key (over-width prompt, full delta
+        pool): those states are dropped again — keeping them would leak an
+        unreachable KV entry per refused prompt, since lookup can never
+        return its slot.
+        """
         slots = []
         for st in states:
             sid = self._next_slot
@@ -73,13 +83,18 @@ class PrefixCache:
             jnp.asarray((vals & 0xFFFFFFFF).astype(np.uint32).view(np.int32)),
             jnp.asarray((vals >> 32).astype(np.int32)),
         )
+        indexed = np.asarray(ins) | np.asarray(upd)
+        out = np.asarray(slots)
+        for sid in out[~indexed]:
+            self.store.pop(int(sid), None)
+        out = np.where(indexed, out, -1)
         self.stats.inserts += int(np.asarray(ins).sum())
         if bool(self.index.delta_overflow) or (
             float(self.index.de_count) / self.index.de_off.shape[0] > 0.75
         ):
             self.index = merge_delta(self.builder, self.index)
             self.stats.merges += 1
-        return np.asarray(slots)
+        return out
 
     def get_state(self, slot: int):
         return self.store.get(int(slot))
