@@ -1,0 +1,156 @@
+"""API-dispatch bench: `StringIndex.execute` vs direct free-function calls.
+
+Runs YCSB mixed workloads twice over identical bulk loads:
+
+* **facade** — one typed ``execute`` batch per round (planning, per-op
+  status construction, auto-merge bookkeeping included), and
+* **direct** — the equivalent grouped legacy dispatches (``insert_batch``
+  for the puts, ``search_batch`` for the gets, ``scan_batch`` for the
+  scans) with hand-rolled query padding, i.e. what every caller had to
+  re-plumb before the facade existed.
+
+Emitted as ``BENCH_api.json`` (via ``benchmarks.run``): ops/sec for both
+paths plus the facade's dispatch overhead in percent — the acceptance
+artifact showing the typed surface adds no meaningful cost on top of the
+fused dispatches it plans into.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import insert_batch, lookup_values, pad_queries, scan_batch, search_batch
+from repro.data import ycsb
+from repro.index import (
+    GetRequest, IndexConfig, PutRequest, ScanRequest, StringIndex,
+)
+
+from .common import dataset
+
+SCAN_WINDOW = 8
+
+
+def _typed_batch(ops) -> List:
+    batch = []
+    for op in ops:
+        if op.kind in ("read", "rmw"):
+            batch.append(GetRequest(op.key))
+        elif op.kind in ("update", "insert"):
+            batch.append(PutRequest(op.key, op.value))
+        elif op.kind == "scan":
+            batch.append(ScanRequest(op.key, SCAN_WINDOW))
+    return batch
+
+
+def _direct_execute(ti, batch, host_pool):
+    """The pre-facade calling convention: grouped legacy free functions,
+    plus the host-side result materialization every caller had to hand-roll
+    (put/get status masks, scan (key, value) entries)."""
+    puts = [r for r in batch if isinstance(r, PutRequest)]
+    gets = [r for r in batch if isinstance(r, GetRequest)]
+    scans = [r for r in batch if isinstance(r, ScanRequest)]
+    pool, ent_off, ent_len = host_pool
+    n_found = 0
+    if puts:
+        qb, ql = pad_queries([r.key for r in puts], ti.width)
+        vals = np.asarray([r.value for r in puts], np.int64)
+        ti, ins, upd = insert_batch(
+            ti, jnp.asarray(qb), jnp.asarray(ql),
+            jnp.asarray((vals & 0xFFFFFFFF).astype(np.uint32).view(np.int32)),
+            jnp.asarray((vals >> 32).astype(np.int32)))
+        applied = np.asarray(ins) | np.asarray(upd)  # per-op outcome
+    if gets:
+        qb, ql = pad_queries([r.key for r in gets], ti.width)
+        found, eid, isd = search_batch(ti, jnp.asarray(qb), jnp.asarray(ql))
+        lo, hi = lookup_values(ti, eid, isd)
+        found, lo, hi = np.asarray(found), np.asarray(lo), np.asarray(hi)
+        values = (hi.astype(np.int64) << 32) | lo.view(np.uint32).astype(np.int64)
+        n_found = int(found.sum())
+    if scans:
+        qb, ql = pad_queries([r.start for r in scans], ti.width)
+        eids, valid = scan_batch(ti, jnp.asarray(qb), jnp.asarray(ql), SCAN_WINDOW)
+        vlo, vhi = lookup_values(ti, jnp.maximum(eids, 0), jnp.zeros_like(eids, bool))
+        eids, valid = np.asarray(eids), np.asarray(valid)
+        svals = (np.asarray(vhi).astype(np.int64) << 32) | \
+            np.asarray(vlo).view(np.uint32).astype(np.int64)
+        entries = [
+            [(pool[ent_off[e]: ent_off[e] + ent_len[e]].tobytes(), v)
+             for e, v, ok in zip(eids[row].tolist(), svals[row].tolist(),
+                                 valid[row].tolist()) if ok]
+            for row in range(eids.shape[0])
+        ]
+    return ti, n_found
+
+
+def _bulk_execute(index: StringIndex, batch):
+    """Facade bulk path: grouped array ops, no per-op result objects."""
+    puts = [r for r in batch if isinstance(r, PutRequest)]
+    gets = [r for r in batch if isinstance(r, GetRequest)]
+    scans = [r for r in batch if isinstance(r, ScanRequest)]
+    if puts:
+        index.put_batch([r.key for r in puts], [r.value for r in puts])
+    if gets:
+        index.get_batch([r.key for r in gets])
+    if scans:
+        eids, valid = index.scan_batch([r.start for r in scans], SCAN_WINDOW)
+        np.asarray(eids)
+
+
+def run(n: int = 8000, n_ops: int = 3000, reps: int = 5) -> list:
+    keys = dataset("reddit", n)
+    loaded = keys[: int(len(keys) * 0.8)]
+    new = keys[int(len(keys) * 0.8):]
+    vals = np.arange(len(loaded), dtype=np.int64)
+    # auto-merge off: both paths must run the identical dispatch sequence
+    cfg = IndexConfig(delta_capacity=max(4096, n_ops * 2),
+                      auto_merge_threshold=None)
+    rows = []
+    for wl in ("A", "B", "E"):
+        ops = ycsb.generate(wl, list(loaded), list(new), n_ops, seed=9,
+                            scan_len=SCAN_WINDOW)
+        batch = _typed_batch(ops)
+
+        index = StringIndex.bulk_load(loaded, vals, cfg)
+        res = index.execute(batch)            # warmup (compile) + correctness
+        facade_found = sum(1 for r in res.results if r.ok and r.value is not None)
+
+        # the facade's bulk array path (no per-op typing): same planning,
+        # grouped get_batch/put_batch/scan_batch on the same index object
+        bulk = StringIndex.bulk_load(loaded, vals, cfg)
+        _bulk_execute(bulk, batch)            # warmup
+
+        direct = StringIndex.bulk_load(loaded, vals, cfg)
+        host_pool = direct._host_entries()
+        ti, direct_found = _direct_execute(direct.ti, batch, host_pool)  # warmup
+
+        # interleaved best-of-N: all three paths see the same machine noise
+        facade_s = bulk_s = direct_s = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            index.execute(batch)
+            facade_s = min(facade_s, time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            _bulk_execute(bulk, batch)
+            bulk_s = min(bulk_s, time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            ti, direct_found = _direct_execute(ti, batch, host_pool)
+            direct_s = min(direct_s, time.perf_counter() - t0)
+
+        rows.append({
+            "bench": "api", "workload": wl, "dataset": "reddit",
+            "n": len(loaded), "n_ops": len(batch),
+            "facade_ops_s": round(len(batch) / facade_s, 1),
+            "facade_bulk_ops_s": round(len(batch) / bulk_s, 1),
+            "direct_ops_s": round(len(batch) / direct_s, 1),
+            "facade_overhead_pct": round(
+                (facade_s - direct_s) / direct_s * 100.0, 2),
+            "bulk_overhead_pct": round(
+                (bulk_s - direct_s) / direct_s * 100.0, 2),
+            "typed_cost_us_per_op": round(
+                (facade_s - direct_s) / len(batch) * 1e6, 3),
+            "facade_found": facade_found,
+        })
+    return rows

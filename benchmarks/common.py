@@ -13,6 +13,7 @@ from repro.core import (
     AlwaysLIT, AlwaysTrie, LITSBuilder, StringSet, freeze, pad_queries,
     scan_batch, search_batch, uniform_hpt,
 )
+from repro.index import GetRequest, IndexConfig, StringIndex
 
 STRUCTURES = ("LITS", "LIT", "TRIE", "SLIPP")
 
@@ -70,19 +71,51 @@ def device_read_mops(b, keys: List[bytes], n_queries: int = 8192, reps: int = 5,
 
 
 def device_scan_mops(b, keys: List[bytes], n_queries: int = 2048, window: int = 16,
-                     reps: int = 3) -> float:
+                     reps: int = 3, backend: str | None = None) -> float:
+    """Batched jitted range-scan throughput (M entries/s).
+
+    ``backend`` selects the rank engine ("jnp" | fused "pallas"); ``None``
+    resolves from ``REPRO_SEARCH_BACKEND`` — scans no longer silently
+    bypass the fused kernel path.
+    """
     ti = freeze(b)
     rng = np.random.default_rng(1)
     idx = rng.integers(0, len(keys), n_queries)
     qb, ql = pad_queries([keys[i] for i in idx], ti.width)
     qb, ql = jnp.asarray(qb), jnp.asarray(ql)
-    out = scan_batch(ti, qb, ql, window=window)
+    out = scan_batch(ti, qb, ql, window, backend=backend)
     t0 = time.perf_counter()
     for _ in range(reps):
-        out = scan_batch(ti, qb, ql, window=window)
+        out = scan_batch(ti, qb, ql, window, backend=backend)
     jax.block_until_ready(out)
     dt = time.perf_counter() - t0
     return n_queries * reps * window / dt / 1e6  # entries/s
+
+
+def facade_index(structure: str, keys: List[bytes],
+                 config: IndexConfig | None = None) -> StringIndex:
+    """Bulk-load ``keys`` into a :class:`StringIndex` for a given structure
+    variant (LITS/LIT/TRIE/SLIPP), via the power-user builder seam."""
+    b, _ = bulkload(structure, keys)
+    return StringIndex.from_builder(b, config)
+
+
+def facade_read_mops(index: StringIndex, keys: List[bytes],
+                     n_queries: int = 8192, reps: int = 5) -> float:
+    """Typed facade point-lookup throughput (Mops): ``execute`` with
+    GetRequests — includes batch planning and per-op result construction,
+    i.e. the full API dispatch cost (compare against
+    :func:`device_read_mops` for the raw free-function path)."""
+    rng = np.random.default_rng(0)
+    idx = rng.integers(0, len(keys), n_queries)
+    batch = [GetRequest(keys[i]) for i in idx]
+    res = index.execute(batch)  # warmup + correctness
+    assert all(r.ok for r in res.results)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        index.execute(batch)
+    dt = time.perf_counter() - t0
+    return n_queries * reps / dt / 1e6
 
 
 def host_insert_kops(structure: str, loaded: List[bytes], to_insert: List[bytes]) -> float:

@@ -32,9 +32,10 @@ def main() -> None:
     ap.add_argument("--out", default=os.path.join(os.path.dirname(__file__), "out"))
     args = ap.parse_args()
 
-    from . import (fig1_prefix_skew, fig7_pmss, fig8_ycsb, fig9_ycsb_mixed,
-                   fig11_space, fig13_unique_rate, fig14_models, fig15_cnode,
-                   fig16_subtrie, kernel_bench, table2_hardness, table3_height)
+    from . import (api_bench, fig1_prefix_skew, fig7_pmss, fig8_ycsb,
+                   fig9_ycsb_mixed, fig11_space, fig13_unique_rate,
+                   fig14_models, fig15_cnode, fig16_subtrie, kernel_bench,
+                   table2_hardness, table3_height)
 
     n = 3000 if args.quick else 20000
     benches = {
@@ -53,6 +54,8 @@ def main() -> None:
         "kernel": lambda: kernel_bench.run(1024 if args.quick else 4096),
         "traversal": lambda: kernel_bench.run_traversal(
             2000 if args.quick else 8000, 1024 if args.quick else 4096),
+        "api": lambda: api_bench.run(3000 if args.quick else 8000,
+                                     800 if args.quick else 3000),
     }
     selected = args.only.split(",") if args.only else list(benches)
     print("name,us_per_call,derived")
@@ -67,6 +70,12 @@ def main() -> None:
             root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
             with open(os.path.join(root, "BENCH_traversal.json"), "w") as f:
                 json.dump({"bench": "traversal", "quick": bool(args.quick),
+                           "rows": rows}, f, indent=2)
+        if name == "api":
+            # facade-vs-free-function dispatch overhead artifact (DESIGN.md §8)
+            root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+            with open(os.path.join(root, "BENCH_api.json"), "w") as f:
+                json.dump({"bench": "api", "quick": bool(args.quick),
                            "rows": rows}, f, indent=2)
         # one summary CSV line per bench module (harness contract)
         n_rows = len(rows)

@@ -1,5 +1,9 @@
-"""Distributed LITS query service on 8 (simulated) devices:
-CDF range partitioning + all_to_all query routing (DESIGN.md §2).
+"""Distributed LITS on 8 (simulated) devices through the StringIndex facade:
+CDF range partitioning + all_to_all query routing (DESIGN.md §5, §8).
+
+`DistributedStringIndex` is the mesh implementation of the same typed
+batched-op surface as the local `StringIndex` — construction owns the
+shard build, device placement, and the routed shard_map service.
 
     PYTHONPATH=src python examples/distributed_index.py
 """
@@ -7,17 +11,14 @@ import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
-import dataclasses as dc
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.strings import random_strings
-from repro.core.tensor_index import pad_queries
-from repro.distributed.index_service import build_sharded, make_service_fn
+from repro.distributed.index_service import DistributedStringIndex
+from repro.index import GetRequest, Status
 
 
 def main() -> None:
@@ -25,36 +26,28 @@ def main() -> None:
     keys = sorted(set(random_strings(rng, 50000, 4, 24)))
     vals = np.arange(len(keys), dtype=np.int64)
     print(f"{len(keys)} keys -> 8 CDF-range shards")
-    sidx = build_sharded(keys, vals, n_shards=8)
-    mesh = jax.make_mesh((8,), ("data",))
-    stk = sidx.stacked
-    put = {}
-    for f in dc.fields(type(stk)):
-        v = getattr(stk, f.name)
-        if f.name in ("width", "max_iters", "cnode_cap", "rank_iters", "delta_probes", "cdf_steps"):
-            put[f.name] = v
-        else:
-            put[f.name] = jax.device_put(v, NamedSharding(mesh, P("data")))
-    stk = type(stk)(**put)
-    fn = make_service_fn(sidx, mesh, per_dest_capacity=512)
+    index = DistributedStringIndex.build(keys, vals, n_shards=8,
+                                         per_dest_capacity=512)
 
     Q = 8 * 2048
     qkeys = [keys[i] for i in rng.integers(0, len(keys), Q)]
-    qb, ql = pad_queries(qkeys, sidx.width)
-    qb = jax.device_put(jnp.asarray(qb), NamedSharding(mesh, P("data")))
-    ql = jax.device_put(jnp.asarray(ql), NamedSharding(mesh, P("data")))
-    found, lo, hi, overflow = fn(stk, qb, ql)  # compile + warm
+    found, got = index.get_batch(qkeys)           # compile + warm
     t0 = time.perf_counter()
     for _ in range(5):
-        found, lo, hi, overflow = fn(stk, qb, ql)
-    jax.block_until_ready(found)
+        found, got = index.get_batch(qkeys)
     dt = (time.perf_counter() - t0) / 5
-    got = np.asarray(lo).view(np.uint32).astype(np.int64)
     kv = dict(zip(keys, vals.tolist()))
     ok = all(got[j] == kv[k] for j, k in enumerate(qkeys[:2000]))
     print(f"routed+searched {Q} queries in {dt * 1e3:.1f} ms "
-          f"({Q / dt / 1e6:.2f} Mops), found={int(np.asarray(found).sum())}/{Q}, "
-          f"values_ok={ok}, overflow={int(np.asarray(overflow).sum())}")
+          f"({Q / dt / 1e6:.2f} Mops), found={int(found.sum())}/{Q}, "
+          f"values_ok={ok}")
+
+    # the typed surface works identically against the mesh implementation
+    res = index.execute([GetRequest(qkeys[0]), GetRequest(b"definitely-missing")])
+    print(f"typed execute on the mesh: {[r.status.name for r in res.results]}, "
+          f"value={res.results[0].value}")
+    assert res.results[0].status == Status.OK
+    assert res.results[1].status == Status.NOT_FOUND
 
 
 if __name__ == "__main__":

@@ -1,55 +1,76 @@
-"""Quickstart: build a LITS index, run batched device lookups, scan, insert.
+"""Quickstart: the `StringIndex` facade — bulk load, typed mixed batches,
+auto-compaction, versioned snapshots (DESIGN.md §8).
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--n 20000]
 """
-import jax.numpy as jnp
+import argparse
+import os
+import tempfile
+
 import numpy as np
 
-from repro.core import (
-    LITSBuilder, StringSet, freeze, insert_batch, lookup_values,
-    merge_delta, pad_queries, scan_batch, search_batch,
-)
 from repro.data.synthetic import load
+from repro.index import (
+    GetRequest, IndexConfig, PutRequest, ScanRequest, Status, StringIndex,
+)
 
 
 def main() -> None:
-    # 1. bulkload (paper Sec. 3.1): sample -> HPT -> collision-driven build
-    keys = sorted(set(load("email", 20000, seed=0)))
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=20000)
+    args = ap.parse_args()
+
+    # 1. bulk load (paper Sec. 3.1): sample -> HPT -> collision-driven build.
+    #    IndexConfig is the one policy object: backends, delta sizing, merge
+    #    threshold — env vars (REPRO_SEARCH_BACKEND, ...) are only defaults.
+    keys = sorted(set(load("email", args.n, seed=0)))
     values = np.arange(len(keys), dtype=np.int64) * 10
-    builder = LITSBuilder()
-    builder.bulkload(StringSet.from_list(keys), values)
-    print(f"bulkloaded {builder.n_keys} keys; heights={builder.heights()}")
-    print(f"space: {builder.space_bytes()['total'] / 2**20:.1f} MiB "
-          f"(HPT {builder.hpt.nbytes() / 2**20:.1f} MiB)")
+    cfg = IndexConfig(delta_capacity=2048, auto_merge_threshold=0.75)
+    index = StringIndex.bulk_load(keys, values, cfg)
+    print(f"bulk loaded {index.n_entries} keys; width={index.width}, "
+          f"device size {index.nbytes() / 2**20:.1f} MiB")
 
-    # 2. freeze to a device TensorIndex; batched jitted point lookups
-    ti = freeze(builder)
+    # 2. one typed mixed batch: gets + a range scan + fresh puts.  execute()
+    #    plans it into grouped fused dispatches (one insert_batch for all
+    #    puts, one search_batch for all gets, one scan_batch per window).
     probe = keys[::97][:512]
-    qb, ql = pad_queries(probe, ti.width)
-    found, eid, is_delta = search_batch(ti, jnp.asarray(qb), jnp.asarray(ql))
-    lo, hi = lookup_values(ti, eid, is_delta)
-    got = (np.asarray(hi).astype(np.int64) << 32) | np.asarray(lo).view(np.uint32)
-    expect = np.asarray([values[keys.index(k)] for k in probe])
-    print(f"device lookups: found {int(found.sum())}/{len(probe)}, "
-          f"values ok={bool((got == expect).all())}")
+    batch = (
+        [GetRequest(k) for k in probe]
+        + [ScanRequest(probe[0], window=5)]
+        + [PutRequest(b"zz-new-key-%04d" % i, 100000 + i) for i in range(128)]
+        + [GetRequest(b"zz-new-key-0007"), GetRequest(b"definitely-missing")]
+    )
+    res = index.execute(batch)
+    gets = res.results[: len(probe)]
+    got_ok = all(
+        r.ok and r.value == values[keys.index(k)] for r, k in zip(gets, probe))
+    print(f"mixed batch: {res.n_get} gets / {res.n_put} puts / "
+          f"{res.n_scan} scans; values ok={got_ok}")
+    scan_entries = res.results[len(probe)].entries
+    print(f"scan from {probe[0]!r}: {[k for k, _ in scan_entries]}")
+    fresh = res.results[len(probe) + 1 + 128]
+    missing = res.results[-1]
+    print(f"get-after-put in one batch: {fresh.status.name} value={fresh.value} "
+          f"(puts apply first); miss status={missing.status.name}")
 
-    # 3. range scan over the frozen order
-    eids, valid = scan_batch(ti, jnp.asarray(qb[:4]), jnp.asarray(ql[:4]), window=5)
-    first = [builder.key_at(int(e)) for e in np.asarray(eids)[0] if e >= 0]
-    print(f"scan from {probe[0]!r}: {first}")
+    # 3. auto-compaction: enough puts to cross the configured threshold —
+    #    no delta_fill_fraction polling in application code.
+    waves = [PutRequest(b"wave-%05d" % i, i) for i in range(1600)]
+    r2 = index.execute(waves)
+    print(f"after {len(waves)} more puts: auto-merged={r2.merged}, "
+          f"delta fill={r2.delta_fill:.2f}, merges so far={index.merge_count}")
+    print(f"merged keys now scannable: "
+          f"{[k for k, _ in index.scan(b'wave-', 3)]}")
 
-    # 4. device delta-buffer inserts + minor compaction
-    new = [b"zz-new-key-%04d" % i for i in range(128)]
-    nb, nl = pad_queries(new, ti.width)
-    nv = np.arange(128, dtype=np.int64)
-    ti, ins, upd = insert_batch(
-        ti, jnp.asarray(nb), jnp.asarray(nl),
-        jnp.asarray((nv & 0xFFFFFFFF).astype(np.uint32).view(np.int32)),
-        jnp.asarray((nv >> 32).astype(np.int32)))
-    print(f"delta inserts: {int(ins.sum())} new, overflow={bool(ti.delta_overflow)}")
-    ti = merge_delta(builder, ti)
-    f2, _, d2 = search_batch(ti, jnp.asarray(nb), jnp.asarray(nl))
-    print(f"after merge: found {int(f2.sum())}/128, in_delta={int(d2.sum())}")
+    # 4. versioned snapshot roundtrip: save -> load -> identical answers
+    path = os.path.join(tempfile.gettempdir(), "quickstart-lits.snap")
+    index.save(path)
+    restored = StringIndex.load(path, cfg)
+    f, v = restored.get_batch(probe)
+    same = bool(f.all()) and (v == np.asarray([values[keys.index(k)] for k in probe])).all()
+    print(f"snapshot roundtrip ({os.path.getsize(path) / 2**20:.1f} MiB): "
+          f"restored lookups identical={bool(same)}")
+    assert got_ok and same and fresh.status == Status.OK
 
 
 if __name__ == "__main__":

@@ -8,6 +8,7 @@ import jax
 import numpy as np
 
 from repro.configs.registry import get_arch
+from repro.index import IndexConfig
 from repro.models import LMModel
 from repro.serve.engine import ServeEngine
 
@@ -16,7 +17,11 @@ def main() -> None:
     cfg = get_arch("h2o-danube-3-4b").reduced()
     model = LMModel(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    eng = ServeEngine(model, params)
+    # one IndexConfig drives the prompt-cache index end to end (DESIGN.md §8):
+    # traversal backend, delta sizing and the auto-compaction threshold
+    eng = ServeEngine(model, params,
+                      index_config=IndexConfig(width=256, delta_capacity=1024,
+                                               auto_merge_threshold=0.75))
     rng = np.random.default_rng(0)
     batches = [rng.integers(0, cfg.vocab, size=(4, 16)).astype(np.int32) for _ in range(3)]
 

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from repro.configs.registry import get_arch
 from repro.data.pipeline import PipelineConfig, RecordStore, TokenPipeline
+from repro.index import IndexConfig
 from repro.models import LMModel
 from repro.train.optimizer import AdamWConfig
 from repro.train.train_loop import TrainConfig, train
@@ -43,7 +44,9 @@ def main() -> None:
     print(f"arch={cfg.name} params={cfg.param_count() / 1e6:.1f}M")
 
     # LITS in the data path: dedup incoming shard manifests by string id
-    store = RecordStore([b"shard-%05d" % i for i in range(1000)])
+    # (StringIndex facade underneath; IndexConfig picks the backends)
+    store = RecordStore([b"shard-%05d" % i for i in range(1000)],
+                        config=IndexConfig(delta_capacity=512))
     incoming = [b"shard-%05d" % i for i in range(990, 1010)]
     fresh = store.dedup(incoming)
     print(f"record-store dedup: {int(fresh.sum())}/{len(incoming)} shards are new")

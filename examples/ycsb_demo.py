@@ -1,11 +1,22 @@
 """YCSB workloads against LITS vs baselines (paper Sec. 4.2, scaled down).
 
+Host op loops exercise the mutable builder per structure; the batched
+device section runs through the `StringIndex` facade (typed GetRequest
+batches via ``execute`` — DESIGN.md §8).
+
     PYTHONPATH=src python examples/ycsb_demo.py [--n 8000] [--ops 3000]
 """
 import argparse
+import os
+import sys
 import time
 
-from benchmarks.common import STRUCTURES, bulkload, dataset, device_read_mops
+# the benchmarks package lives at the repo root, next to examples/
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import (
+    STRUCTURES, bulkload, dataset, facade_index, facade_read_mops,
+)
 from repro.data import ycsb
 
 
@@ -38,10 +49,11 @@ def main() -> None:
                         b.update(op.key, v + 1)
             line += f"{args.ops / (time.perf_counter() - t0) / 1e3:>12.1f}"
         print(line)
-    print("\nbatched device read throughput (YCSB C, jitted):")
+    print("\nbatched device read throughput (YCSB C, StringIndex.execute):")
     for s in STRUCTURES:
-        b, _ = bulkload(s, keys)
-        print(f"  {s:<8} {device_read_mops(b, keys):.3f} Mops")
+        index = facade_index(s, keys)
+        mops = facade_read_mops(index, keys, n_queries=min(8192, len(keys)))
+        print(f"  {s:<8} {mops:.3f} Mops")
 
 
 if __name__ == "__main__":

@@ -268,6 +268,11 @@ def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
 class IndexRuntimeConfig:
     """How LITS query paths execute on this host.
 
+    .. note:: application code should carry these choices in
+       :class:`repro.index.IndexConfig` (``search_backend`` /
+       ``kernel_backend``, DESIGN.md §8); this dataclass remains for
+       launch-grid plumbing that predates the facade.
+
     ``search_backend`` picks the traversal engine for ``search_batch`` /
     ``base_search`` ("jnp" = bitwise-reference oracle, "pallas" = fused
     single-kernel engine); ``kernel_mode`` picks how Pallas kernels execute

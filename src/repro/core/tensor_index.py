@@ -15,17 +15,28 @@ query-side operations are single jitted functions, composable under
 The traversal mirrors the host builder bit-for-bit: slot positions come from
 the same float32 ``positions_impl`` the builder used at build time.
 
+.. note:: **Legacy surface.**  These free functions are the jitted
+   primitives underneath :class:`repro.index.StringIndex` (DESIGN.md §8) —
+   the supported application API that owns config resolution, batch
+   planning, auto-compaction and snapshots.  New call sites should go
+   through the facade; this module stays stable as the kernel-level seam
+   the facade (and power users) compose.
+
 Traversal backends (DESIGN.md §7)
 ---------------------------------
-``search_batch``/``base_search`` take ``backend="jnp" | "pallas"``:
+``search_batch``/``base_search``/``rank_batch``/``scan_batch`` take
+``backend="jnp" | "pallas"``:
 
 * ``jnp``    — the level-synchronous pure-jnp reference (the bitwise oracle),
-* ``pallas`` — the fused single-kernel engine (:mod:`repro.kernels.traverse`),
-  bit-identical ``(found, eid)`` by construction (shared primitives).
+* ``pallas`` — the fused single-kernel engines (:mod:`repro.kernels.traverse`
+  for point lookups, :mod:`repro.kernels.rank` for ordered rank/scan),
+  bit-identical by construction (shared primitives).
 
 ``backend=None`` resolves once from the ``REPRO_SEARCH_BACKEND`` environment
-variable (default ``jnp``).  String primitives live in
-:mod:`repro.kernels.strops`, shared verbatim by both backends.
+variable (default ``jnp``); the optional ``interpret`` argument overrides
+the ``REPRO_KERNEL_BACKEND`` Pallas execution mode per call.  String
+primitives live in :mod:`repro.kernels.strops`, shared verbatim by both
+backends.
 """
 from __future__ import annotations
 
@@ -50,7 +61,7 @@ from .builder import (
     PAYLOAD_MASK,
 )
 from .hpt import MAX_CDF_STEPS, get_cdf_impl
-from .walk import resolve_terminal, walk_terminal
+from .walk import rank_sorted, resolve_terminal, walk_terminal
 from repro.kernels.strops import (
     gather_bytes as _gather_bytes,
     hash16 as _hash16,
@@ -59,6 +70,13 @@ from repro.kernels.strops import (
     str_cmp_prefix as _str_cmp_prefix,
     str_eq as _str_eq,
 )
+
+
+# the non-pytree (static) fields of TensorIndex — shared by everything that
+# walks the dataclass generically (shard stacking/slicing, mesh placement,
+# snapshot headers) so a new static field can't be missed in one copy
+STATIC_FIELDS = ("width", "max_iters", "cnode_cap", "rank_iters",
+                 "delta_probes", "cdf_steps")
 
 
 @partial(
@@ -72,8 +90,7 @@ from repro.kernels.strops import (
         "db_bytes", "db_used", "de_off", "de_len", "de_val_lo", "de_val_hi",
         "de_hash", "de_count", "dh_slot", "delta_overflow",
     ],
-    meta_fields=["width", "max_iters", "cnode_cap", "rank_iters", "delta_probes",
-                 "cdf_steps"],
+    meta_fields=list(STATIC_FIELDS),
 )
 @dataclasses.dataclass
 class TensorIndex:
@@ -317,41 +334,45 @@ def resolve_search_backend(backend: str | None = None) -> str:
     return backend
 
 
-def base_search_impl(ti: TensorIndex, qbytes, qlens, backend: str = "jnp"):
+def base_search_impl(ti: TensorIndex, qbytes, qlens, backend: str = "jnp",
+                     interpret: bool | None = None):
     """Traversal + terminal resolve over the frozen base index (no delta probe).
 
     Traceable (usable inside jit / shard_map); ``backend`` must already be
     resolved to a concrete value.  Both backends return bit-identical
     ``(found, eid)`` — the contract tested in tests/test_kernels.py.
+    ``interpret`` overrides the Pallas execution mode (``None`` -> the
+    cached ``REPRO_KERNEL_BACKEND`` default).
     """
     if backend == "pallas":
         from repro.kernels import ops as _kops  # lazy: keeps core import light
 
-        found, eid, _levels = _kops.fused_search(ti, qbytes, qlens)
+        found, eid, _levels = _kops.fused_search(ti, qbytes, qlens,
+                                                 interpret=interpret)
         return found, eid
     item = _traverse(ti, qbytes, qlens)
     return _resolve_terminal(ti, qbytes, qlens, item)
 
 
-@partial(jax.jit, static_argnames=("backend",))
+@partial(jax.jit, static_argnames=("backend", "interpret"))
 def base_search(ti: TensorIndex, qbytes: jax.Array, qlens: jax.Array,
-                backend: str = "jnp"):
+                backend: str = "jnp", interpret: bool | None = None):
     """Jitted :func:`base_search_impl` (snapshot search, delta skipped)."""
-    return base_search_impl(ti, qbytes, qlens, backend)
+    return base_search_impl(ti, qbytes, qlens, backend, interpret)
 
 
-@partial(jax.jit, static_argnames=("backend",))
+@partial(jax.jit, static_argnames=("backend", "interpret"))
 def _search_batch_jit(ti: TensorIndex, qbytes: jax.Array, qlens: jax.Array,
-                      backend: str):
+                      backend: str, interpret: bool | None):
     dfound, did = _delta_lookup(ti, qbytes, qlens)
-    bfound, beid = base_search_impl(ti, qbytes, qlens, backend)
+    bfound, beid = base_search_impl(ti, qbytes, qlens, backend, interpret)
     found = dfound | bfound
     eid = jnp.where(dfound, did, beid)
     return found, eid, dfound
 
 
 def search_batch(ti: TensorIndex, qbytes: jax.Array, qlens: jax.Array,
-                 *, backend: str | None = None):
+                 *, backend: str | None = None, interpret: bool | None = None):
     """Batched point lookup. Returns (found, eid, is_delta).
 
     ``backend`` picks the traversal engine (``"jnp"`` reference or fused
@@ -359,7 +380,8 @@ def search_batch(ti: TensorIndex, qbytes: jax.Array, qlens: jax.Array,
     The delta-buffer probe always runs on the jnp path (mutable state stays
     outside the kernel).
     """
-    return _search_batch_jit(ti, qbytes, qlens, resolve_search_backend(backend))
+    return _search_batch_jit(ti, qbytes, qlens, resolve_search_backend(backend),
+                             interpret)
 
 
 @jax.jit
@@ -379,43 +401,66 @@ def lookup_values(ti: TensorIndex, eid: jax.Array, is_delta: jax.Array):
 # ordered rank + scan (over the frozen sorted entry order)
 # ---------------------------------------------------------------------------
 
-@jax.jit
-def rank_batch(ti: TensorIndex, qbytes: jax.Array, qlens: jax.Array) -> jax.Array:
-    """First rank r such that key(ent_sorted[r]) >= query (binary search)."""
-    B = qbytes.shape[0]
-    n = ti.ent_sorted.shape[0]
-    lo = jnp.zeros(B, jnp.int32)
-    hi = jnp.full(B, n, jnp.int32)
+def rank_batch_impl(ti: TensorIndex, qbytes, qlens, backend: str = "jnp",
+                    interpret: bool | None = None) -> jax.Array:
+    """Ordered rank, traceable; ``backend`` must be a resolved concrete value.
 
-    def body(_, carry):
-        lo, hi = carry
-        mid = (lo + hi) // 2
-        e = jnp.take(ti.ent_sorted, jnp.minimum(mid, n - 1))
-        cmp = _str_cmp_full(
-            qbytes, qlens, ti.key_bytes, jnp.take(ti.ent_off, e), jnp.take(ti.ent_len, e)
-        )
-        go_right = (cmp > 0) & (lo < hi)
-        nlo = jnp.where(go_right, mid + 1, lo)
-        nhi = jnp.where(go_right | (lo >= hi), hi, mid)
-        return nlo, nhi
-
-    lo, _ = jax.lax.fori_loop(0, ti.rank_iters, body, (lo, hi))
-    return lo
-
-
-@partial(jax.jit, static_argnames=("window",))
-def scan_batch(ti: TensorIndex, qbytes: jax.Array, qlens: jax.Array, window: int = 16):
-    """Range scan: entry ids of the next ``window`` keys >= query, plus validity mask.
-
-    Scans read the frozen snapshot order; delta-buffer keys become visible
-    after the next merge (epoch semantics, DESIGN.md §2).
+    Both backends run the shared :func:`repro.core.walk.rank_sorted` binary
+    search, so ranks are bit-identical (``jnp`` reference vs the fused
+    ``pallas`` kernel in :mod:`repro.kernels.rank`).
     """
-    r = rank_batch(ti, qbytes, qlens)
+    if backend == "pallas":
+        from repro.kernels import ops as _kops  # lazy: keeps core import light
+
+        return _kops.fused_rank(ti, qbytes, qlens, interpret=interpret)
+    return rank_sorted(
+        qbytes, qlens, ti.ent_sorted, ti.ent_off, ti.ent_len, ti.key_bytes,
+        rank_iters=ti.rank_iters,
+    )
+
+
+@partial(jax.jit, static_argnames=("backend", "interpret"))
+def _rank_batch_jit(ti: TensorIndex, qbytes: jax.Array, qlens: jax.Array,
+                    backend: str, interpret: bool | None) -> jax.Array:
+    return rank_batch_impl(ti, qbytes, qlens, backend, interpret)
+
+
+def rank_batch(ti: TensorIndex, qbytes: jax.Array, qlens: jax.Array,
+               *, backend: str | None = None,
+               interpret: bool | None = None) -> jax.Array:
+    """First rank r such that key(ent_sorted[r]) >= query (binary search).
+
+    ``backend`` routes through the same :func:`resolve_search_backend` path
+    as :func:`base_search`, so range scans can use the fused Pallas rank
+    kernel instead of always falling back to jnp.
+    """
+    return _rank_batch_jit(ti, qbytes, qlens, resolve_search_backend(backend),
+                           interpret)
+
+
+@partial(jax.jit, static_argnames=("window", "backend", "interpret"))
+def _scan_batch_jit(ti: TensorIndex, qbytes: jax.Array, qlens: jax.Array,
+                    window: int, backend: str, interpret: bool | None):
+    r = rank_batch_impl(ti, qbytes, qlens, backend, interpret)
     n = ti.ent_sorted.shape[0]
     idx = r[:, None] + jnp.arange(window, dtype=jnp.int32)[None, :]
     valid = idx < n
     eids = jnp.take(ti.ent_sorted, jnp.minimum(idx, n - 1))
     return jnp.where(valid, eids, -1), valid
+
+
+def scan_batch(ti: TensorIndex, qbytes: jax.Array, qlens: jax.Array,
+               window: int = 16, *, backend: str | None = None,
+               interpret: bool | None = None):
+    """Range scan: entry ids of the next ``window`` keys >= query, plus validity mask.
+
+    Scans read the frozen snapshot order; delta-buffer keys become visible
+    after the next merge (epoch semantics, DESIGN.md §2).  ``backend``
+    selects the rank engine (``"jnp"`` | fused ``"pallas"``; ``None`` ->
+    ``REPRO_SEARCH_BACKEND``).
+    """
+    return _scan_batch_jit(ti, qbytes, qlens, window,
+                           resolve_search_backend(backend), interpret)
 
 
 # ---------------------------------------------------------------------------

@@ -27,7 +27,7 @@ from .builder import (
     TAG_TRIE,
 )
 from .hpt import positions_impl
-from repro.kernels.strops import hash16, str_cmp_prefix, str_eq
+from repro.kernels.strops import hash16, str_cmp_full, str_cmp_prefix, str_eq
 
 
 def item_tag(item: jax.Array) -> jax.Array:
@@ -136,3 +136,34 @@ def resolve_terminal(
     found = ent_ok | cfound
     out_eid = jnp.where(ent_ok, eid, jnp.where(cfound, ceid, -1))
     return found, out_eid
+
+
+def rank_sorted(
+    qbytes, qlens, ent_sorted, ent_off, ent_len, key_bytes,
+    *, rank_iters: int,
+):
+    """First rank r such that key(ent_sorted[r]) >= query (binary search).
+
+    Flat-pool implementation shared by the jnp reference (`rank_batch`) and
+    the fused Pallas rank kernel (:mod:`repro.kernels.rank`) — the same
+    structural bit-identity contract as ``walk_terminal`` (DESIGN.md §7).
+    """
+    B = qbytes.shape[0]
+    n = ent_sorted.shape[0]
+    lo = jnp.zeros(B, jnp.int32)
+    hi = jnp.full(B, n, jnp.int32)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = (lo + hi) // 2
+        e = jnp.take(ent_sorted, jnp.minimum(mid, n - 1))
+        cmp = str_cmp_full(
+            qbytes, qlens, key_bytes, jnp.take(ent_off, e), jnp.take(ent_len, e)
+        )
+        go_right = (cmp > 0) & (lo < hi)
+        nlo = jnp.where(go_right, mid + 1, lo)
+        nhi = jnp.where(go_right | (lo >= hi), hi, mid)
+        return nlo, nhi
+
+    lo, _ = jax.lax.fori_loop(0, rank_iters, body, (lo, hi))
+    return lo

@@ -17,7 +17,7 @@ from typing import Dict, Iterator, List, Optional
 
 import numpy as np
 
-from repro.core import LITSBuilder, StringSet, freeze, pad_queries, search_batch
+from repro.index import IndexConfig, StringIndex
 
 
 @dataclasses.dataclass
@@ -61,27 +61,27 @@ class TokenPipeline:
 
 
 class RecordStore:
-    """String-keyed document store backed by LITS (paper integration point)."""
+    """String-keyed document store backed by LITS (paper integration point).
+
+    A thin consumer of :class:`repro.index.StringIndex` (DESIGN.md §8):
+    bulk load at construction, batched ``get`` dispatches for dedup and
+    lookup, delta-buffer ``put`` (with the facade's auto-compaction) for
+    incremental inserts — no host refreeze per insert.
+    """
 
     def __init__(self, keys: List[bytes], payloads: Optional[np.ndarray] = None,
-                 backend: Optional[str] = None, **builder_kw):
-        self.builder = LITSBuilder(**builder_kw)
+                 backend: Optional[str] = None,
+                 config: Optional[IndexConfig] = None):
         vals = np.arange(len(keys), dtype=np.int64) if payloads is None else payloads
-        self._payload_is_rowid = payloads is None
-        ss = StringSet.from_list(keys)
-        self.builder.bulkload(ss, vals)
-        self.index = freeze(self.builder)
-        # traversal backend (DESIGN.md §7): None -> REPRO_SEARCH_BACKEND env
-        self.backend = backend
+        if config is None:
+            # legacy shorthand: just the traversal backend
+            config = IndexConfig(search_backend=backend)
+        self.index = StringIndex.bulk_load(keys, np.asarray(vals, np.int64),
+                                           config)
 
     def lookup_batch(self, keys: List[bytes]):
-        """Batched device lookup: returns (found mask, row ids)."""
-        import jax.numpy as jnp
-
-        qb, ql = pad_queries(keys, self.index.width)
-        found, eid, isd = search_batch(
-            self.index, jnp.asarray(qb), jnp.asarray(ql), backend=self.backend)
-        return np.asarray(found), np.asarray(eid)
+        """Batched device lookup: returns (found mask, payloads/row ids)."""
+        return self.index.get_batch(keys)
 
     def dedup(self, keys: List[bytes]) -> np.ndarray:
         """Mask of keys NOT already present (the dedup filter)."""
@@ -89,7 +89,8 @@ class RecordStore:
         return ~found
 
     def insert(self, key: bytes, payload: int) -> bool:
-        ok = self.builder.insert(key, payload)
-        if ok:
-            self.index = freeze(self.builder)
-        return ok
+        """Insert a NEW record; returns False (no write) if the key exists."""
+        found, _ = self.index.get_batch([key])
+        if bool(found[0]):
+            return False
+        return self.index.put(key, payload).ok

@@ -34,10 +34,15 @@ from repro.core import LITSBuilder, StringSet, freeze, lookup_values
 from repro.core.hpt import get_cdf_impl
 from repro.core.strings import sort_order
 from repro.core.tensor_index import (
-    TensorIndex, base_search_impl, resolve_search_backend,
+    STATIC_FIELDS, TensorIndex, base_search_impl, resolve_search_backend,
 )
+from repro.index import StringIndexBase
 
 BOUNDARY_EPS = 1e-6
+
+
+class RoutingOverflowError(RuntimeError):
+    """A routed query batch exceeded a shard's per-destination capacity."""
 
 
 @dataclasses.dataclass
@@ -87,8 +92,7 @@ def _stack_indices(tis: List[TensorIndex]) -> TensorIndex:
     import dataclasses as dc
 
     data_fields = [f.name for f in dc.fields(TensorIndex)
-                   if f.name not in ("width", "max_iters", "cnode_cap",
-                                     "rank_iters", "delta_probes", "cdf_steps")]
+                   if f.name not in STATIC_FIELDS]
     out = {}
     for name in data_fields:
         leaves = [np.asarray(jax.device_get(getattr(t, name))) for t in tis]
@@ -120,8 +124,7 @@ def _slice_shard(stacked: TensorIndex, s) -> TensorIndex:
     kw = {}
     for f in dc.fields(TensorIndex):
         v = getattr(stacked, f.name)
-        if f.name in ("width", "max_iters", "cnode_cap", "rank_iters",
-                      "delta_probes", "cdf_steps"):
+        if f.name in STATIC_FIELDS:
             kw[f.name] = v
         else:
             kw[f.name] = v[s] if hasattr(v, "ndim") else v
@@ -130,7 +133,8 @@ def _slice_shard(stacked: TensorIndex, s) -> TensorIndex:
 
 def make_service_fn(sidx: ShardedIndex, mesh, axis: str = "data",
                     per_dest_capacity: int = 256, shard_axes=None,
-                    backend: str | None = None):
+                    backend: str | None = None,
+                    interpret: bool | None = None):
     """Returns a jitted shard_map fn: (qbytes, qlens) -> (found, lo, hi, overflow).
 
     ``axis`` is the partition axis of the index (all_to_all routing axis);
@@ -138,6 +142,7 @@ def make_service_fn(sidx: ShardedIndex, mesh, axis: str = "data",
     are sharded over — extra axes act as serving replicas (the index is
     replicated across them).  ``backend`` selects the local traversal engine
     (DESIGN.md §7); ``None`` resolves from ``REPRO_SEARCH_BACKEND``.
+    ``interpret`` overrides the Pallas execution mode (None -> env).
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
@@ -174,7 +179,7 @@ def make_service_fn(sidx: ShardedIndex, mesh, axis: str = "data",
         rl = recvl.reshape(n * C)
         # §Perf H3: serving snapshots are immutable — skip the delta-buffer
         # probe (16 hash probes x W-byte compares per query in search_batch).
-        found, eid = base_search_impl(ti, rq, rl, backend)
+        found, eid = base_search_impl(ti, rq, rl, backend, interpret)
         lo, hi = lookup_values(ti, eid, jnp.zeros_like(found))
         found = found & (rl > 0)
         # send results home
@@ -196,3 +201,135 @@ def make_service_fn(sidx: ShardedIndex, mesh, axis: str = "data",
         check_rep=False,
     )
     return jax.jit(fn)
+
+
+# ---------------------------------------------------------------------------
+# StringIndex over the mesh (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+class DistributedStringIndex(StringIndexBase):
+    """A :class:`repro.index.StringIndexBase` implementation over a device mesh.
+
+    Wraps a :class:`ShardedIndex` + its routed ``shard_map`` service into
+    the same typed batched-op surface as the local
+    :class:`repro.index.StringIndex`: ``get_batch`` / ``execute`` with
+    per-op :class:`~repro.index.Status` codes.  Serving snapshots are
+    immutable (delta probes are skipped shard-side), so PUTs and SCANs
+    report ``Status.UNSUPPORTED`` — rebuild via :meth:`build` to ingest.
+
+    Construction places every stacked pool over the mesh partition axis
+    (``NamedSharding(mesh, P(axis))``), so callers no longer hand-roll the
+    per-field ``device_put`` loop.
+    """
+
+    def __init__(self, sidx: ShardedIndex, mesh, axis: str = "data",
+                 per_dest_capacity: int = 256, shard_axes=None,
+                 config=None):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.index import IndexConfig
+
+        self.config = config or IndexConfig()
+        self.mesh = mesh
+        self.axis = axis
+        self.shard_axes = (axis,) if shard_axes is None else tuple(shard_axes)
+        # spread the stacked index over the mesh (leading shard axis -> axis)
+        put = {}
+        for f in dataclasses.fields(TensorIndex):
+            v = getattr(sidx.stacked, f.name)
+            if f.name in STATIC_FIELDS:
+                put[f.name] = v
+            else:
+                put[f.name] = jax.device_put(v, NamedSharding(mesh, P(axis)))
+        self.sidx = dataclasses.replace(sidx, stacked=TensorIndex(**put))
+        self._per_dest_capacity = per_dest_capacity
+        self._rows = int(np.prod([mesh.shape[a] for a in self.shard_axes]))
+        self._fn = make_service_fn(
+            self.sidx, mesh, axis=axis, per_dest_capacity=per_dest_capacity,
+            shard_axes=shard_axes, backend=self.config.search_backend,
+            interpret=self.config.resolved_interpret())
+
+    @classmethod
+    def build(cls, keys: List[bytes], values: np.ndarray, n_shards: int,
+              mesh=None, **kw) -> "DistributedStringIndex":
+        """Bulk load: CDF-range partition -> per-shard LITS -> mesh placement."""
+        sidx = build_sharded(keys, values, n_shards)
+        if mesh is None:
+            mesh = jax.make_mesh((n_shards,), ("data",))
+        return cls(sidx, mesh, **kw)
+
+    @property
+    def width(self) -> int:
+        return self.sidx.width
+
+    @property
+    def n_shards(self) -> int:
+        return self.sidx.n_shards
+
+    def get_batch(self, keys) -> Tuple[np.ndarray, np.ndarray]:
+        """Routed point lookups: (found mask, int64 values; misses hold 0).
+
+        The query batch is padded to a multiple of the query-shard row
+        count (zero-length pads can never match — ``found &= qlens > 0``
+        shard-side), routed with ``all_to_all``, searched locally on the
+        owner shard, and routed back.
+
+        Raises :class:`RoutingOverflowError` if any destination shard
+        received more than ``per_dest_capacity`` queries: the dropped
+        queries would otherwise come back as silently-wrong NOT_FOUNDs.
+        """
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core.tensor_index import pad_queries
+
+        B = len(keys)
+        if B == 0:
+            return np.zeros(0, bool), np.zeros(0, np.int64)
+        Bp = ((B + self._rows - 1) // self._rows) * self._rows
+        qb, ql = pad_queries(list(keys), self.sidx.width)
+        qbp = np.zeros((Bp, qb.shape[1]), np.uint8)
+        qbp[:B] = qb
+        qlp = np.zeros(Bp, np.int32)
+        qlp[:B] = ql
+        sharding = NamedSharding(self.mesh, P(self.shard_axes))
+        qbp = jax.device_put(jnp.asarray(qbp), sharding)
+        qlp = jax.device_put(jnp.asarray(qlp), sharding)
+        found, lo, hi, overflow = self._fn(self.sidx.stacked, qbp, qlp)
+        n_dropped = int(np.asarray(overflow).sum())
+        if n_dropped:
+            raise RoutingOverflowError(
+                f"{n_dropped} queries exceeded per_dest_capacity="
+                f"{self._per_dest_capacity} on their owner shard; raise the "
+                f"capacity or split the batch")
+        found = np.asarray(found)[:B]
+        lo = np.asarray(lo)[:B].view(np.uint32).astype(np.int64)
+        hi = np.asarray(hi)[:B].astype(np.int64)
+        return found, np.where(found, (hi << 32) | lo, 0)
+
+    def execute(self, batch):
+        """Typed batch entry point (GETs only on the read-only mesh service).
+
+        Failures stay data (the StringIndexBase contract): ops other than
+        GET report ``Status.UNSUPPORTED``, and a batch that trips a shard's
+        routing capacity marks every get ``Status.ROUTING_OVERFLOW`` (the
+        dropped subset is unknowable once routed — retry with a smaller
+        batch or a larger ``per_dest_capacity``).
+        """
+        from repro.index import BatchResult, GetRequest, OpResult, Status
+
+        results = [None] * len(batch)
+        gets = [(i, r) for i, r in enumerate(batch) if isinstance(r, GetRequest)]
+        for i, r in enumerate(batch):
+            if not isinstance(r, GetRequest):
+                results[i] = OpResult(Status.UNSUPPORTED)
+        if gets:
+            try:
+                found, vals = self.get_batch([r.key for _, r in gets])
+            except RoutingOverflowError:
+                overflowed = OpResult(Status.ROUTING_OVERFLOW)
+                for i, _ in gets:
+                    results[i] = overflowed
+            else:
+                self._map_get_results(gets, found, vals, self.sidx.width,
+                                      results)
+        return BatchResult(results=results, n_get=len(gets),
+                           n_put=0, n_scan=0, merged=False, delta_fill=0.0)

@@ -1,0 +1,37 @@
+"""`repro.index` — the supported application-facing LITS API (DESIGN.md §8).
+
+:class:`StringIndex` owns the full lifecycle (bulk load, typed batched ops,
+auto-compaction, versioned snapshots); :class:`IndexConfig` consolidates all
+policy, with environment variables demoted to defaults.  The free functions
+in :mod:`repro.core` remain as the kernel-level seam underneath.
+"""
+from .facade import (
+    BatchResult,
+    GetRequest,
+    IndexConfig,
+    OpResult,
+    PutRequest,
+    Request,
+    ScanRequest,
+    Status,
+    StringIndex,
+    StringIndexBase,
+)
+from .snapshot import (
+    SNAPSHOT_MAGIC,
+    SNAPSHOT_VERSION,
+    SnapshotError,
+    SnapshotFormatError,
+    SnapshotVersionError,
+    load_index,
+    save_index,
+)
+
+__all__ = [
+    "StringIndex", "StringIndexBase", "IndexConfig",
+    "GetRequest", "PutRequest", "ScanRequest", "Request",
+    "OpResult", "BatchResult", "Status",
+    "save_index", "load_index",
+    "SnapshotError", "SnapshotFormatError", "SnapshotVersionError",
+    "SNAPSHOT_MAGIC", "SNAPSHOT_VERSION",
+]

@@ -1,0 +1,483 @@
+"""`StringIndex` — the first-class LITS index facade (DESIGN.md §8).
+
+One object owns the full index lifecycle that was previously scattered over
+~10 free functions and two environment variables:
+
+* :class:`IndexConfig` — unified configuration (width, delta-pool sizing,
+  kernel/search backends, auto-compaction policy).  Environment variables
+  (``REPRO_SEARCH_BACKEND``, ``REPRO_KERNEL_BACKEND``) become *defaults*;
+  an explicit config field always wins.
+* :meth:`StringIndex.bulk_load` — paper Sec. 3.1 bulkload to a frozen
+  device index.
+* Typed batched ops — :class:`GetRequest` / :class:`PutRequest` /
+  :class:`ScanRequest` in, :class:`BatchResult` out, with per-op
+  :class:`Status` codes (failures are data, not exceptions).
+* :meth:`StringIndex.execute` — plans a mixed batch into grouped fused
+  dispatches: **one** ``insert_batch`` for all puts, **one**
+  ``search_batch`` for all gets, one ``scan_batch`` per distinct window —
+  and runs ``merge_delta`` automatically when the delta fill fraction
+  crosses the configured threshold.
+* :meth:`StringIndex.save` / :meth:`StringIndex.load` — versioned pytree
+  snapshots (:mod:`repro.index.snapshot`).
+
+Batch semantics (the planning contract tested in
+tests/test_string_index.py): within one ``execute`` call, **puts apply
+first**, then gets and scans observe the post-put index — i.e. the batch is
+equivalent to the legacy sequence ``insert_batch(all puts)`` →
+``search_batch(all gets)`` → ``scan_batch(all scans)``, bit-identically on
+both traversal backends.  Gets see fresh puts through the delta probe;
+scans keep the frozen-epoch semantics of DESIGN.md §2 (delta keys become
+scannable after the next merge, which ``execute`` may itself trigger).
+
+The free functions in :mod:`repro.core.tensor_index` remain supported as
+the kernel-level seam underneath this facade (legacy surface — see the
+deprecation note in that module's docstring).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import LITSBuilder, LITSConfig, StringSet
+from repro.core.tensor_index import (
+    TensorIndex,
+    delta_fill_fraction,
+    freeze,
+    insert_batch,
+    lookup_values,
+    merge_delta,
+    pad_queries,
+    resolve_search_backend,
+    scan_batch,
+    search_batch,
+)
+from .snapshot import load_index, save_index
+
+
+# ---------------------------------------------------------------------------
+# unified configuration
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class IndexConfig:
+    """All index policy in one place; env vars are defaults, not the API.
+
+    Resolution precedence (DESIGN.md §8): explicit config field > environment
+    variable > built-in default.  ``search_backend=None`` defers to
+    ``REPRO_SEARCH_BACKEND`` (default ``"jnp"``); ``kernel_backend=None``
+    defers to ``REPRO_KERNEL_BACKEND`` (default: interpret off-TPU).
+    """
+
+    width: Optional[int] = None          # None: longest bulk-load key + headroom
+    delta_capacity: int = 4096           # delta-buffer entry pool size
+    delta_bytes: Optional[int] = None    # delta byte pool (None: capacity-derived)
+    delta_probes: int = 16               # open-addressing probe bound
+    search_backend: Optional[str] = None  # "jnp" | "pallas" | None(env)
+    kernel_backend: Optional[str] = None  # "auto" | "interpret" | "native" | None(env)
+    auto_merge_threshold: Optional[float] = 0.75  # None disables auto-compaction
+    scan_window: int = 16                # default ScanRequest window
+    builder: Optional[LITSConfig] = None  # host build policy (cnode cap, HPT shape)
+
+    def resolved_search_backend(self) -> str:
+        return resolve_search_backend(self.search_backend)
+
+    def resolved_interpret(self) -> Optional[bool]:
+        """Pallas execution mode: None defers to the process-wide env default."""
+        if self.kernel_backend is None:
+            return None
+        from repro.kernels.ops import resolve_interpret
+
+        return resolve_interpret(self.kernel_backend)
+
+
+# ---------------------------------------------------------------------------
+# typed requests / responses
+# ---------------------------------------------------------------------------
+
+class Status(enum.IntEnum):
+    """Per-op result codes: failures surface as data, never exceptions."""
+
+    OK = 0
+    NOT_FOUND = 1            # GET: key absent
+    REJECTED_OVER_WIDTH = 2  # key longer than the index width (unrepresentable)
+    REJECTED_FULL = 3        # PUT: delta pool full (merge and retry)
+    UNSUPPORTED = 4          # op not available on this implementation
+    ROUTING_OVERFLOW = 5     # distributed: batch exceeded a shard's routing
+    #                          capacity — results indeterminate, retry smaller
+
+
+@dataclasses.dataclass(frozen=True, slots=True)
+class GetRequest:
+    key: bytes
+
+
+@dataclasses.dataclass(frozen=True, slots=True)
+class PutRequest:
+    key: bytes
+    value: int
+
+
+@dataclasses.dataclass(frozen=True, slots=True)
+class ScanRequest:
+    start: bytes
+    window: Optional[int] = None   # None -> IndexConfig.scan_window
+
+
+Request = Union[GetRequest, PutRequest, ScanRequest]
+
+
+@dataclasses.dataclass(frozen=True, slots=True)
+class OpResult:
+    status: Status
+    value: Optional[int] = None       # GET hit: the stored 64-bit value
+    updated: bool = False             # PUT: key existed, value was updated
+    entries: Optional[Tuple[Tuple[bytes, int], ...]] = None  # SCAN results
+
+    @property
+    def ok(self) -> bool:
+        return self.status == Status.OK
+
+
+# interned payload-free results: execute() returns thousands of these per
+# batch, and a frozen dataclass is immutable, so sharing instances is safe
+_PUT_OK = OpResult(Status.OK)
+_PUT_UPDATED = OpResult(Status.OK, updated=True)
+_NOT_FOUND = OpResult(Status.NOT_FOUND)
+_REJECTED_OVER_WIDTH = OpResult(Status.REJECTED_OVER_WIDTH)
+_REJECTED_FULL = OpResult(Status.REJECTED_FULL)
+
+
+@dataclasses.dataclass
+class BatchResult:
+    """``execute`` output: per-op results in request order + batch effects."""
+
+    results: List[OpResult]
+    n_get: int = 0
+    n_put: int = 0
+    n_scan: int = 0
+    merged: bool = False              # auto-compaction ran during this batch
+    delta_fill: float = 0.0           # fill fraction after the batch
+
+    def statuses(self) -> List[Status]:
+        return [r.status for r in self.results]
+
+
+# ---------------------------------------------------------------------------
+# 64-bit value packing (device pools store values as lo/hi int32 pairs)
+# ---------------------------------------------------------------------------
+
+def _split_values(vals: np.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    v = np.asarray(vals, np.int64)
+    lo = (v & 0xFFFFFFFF).astype(np.uint32).view(np.int32)
+    hi = (v >> 32).astype(np.int32)
+    return jnp.asarray(lo), jnp.asarray(hi)
+
+
+def _join_values(lo, hi) -> np.ndarray:
+    lo = np.asarray(lo, np.int32).view(np.uint32).astype(np.int64)
+    hi = np.asarray(hi, np.int32).astype(np.int64)
+    return (hi << 32) | lo
+
+
+# ---------------------------------------------------------------------------
+# the facade
+# ---------------------------------------------------------------------------
+
+class StringIndexBase:
+    """Minimal contract every StringIndex implementation provides.
+
+    Implemented by the local single-device :class:`StringIndex` and by the
+    mesh-distributed
+    :class:`repro.distributed.index_service.DistributedStringIndex`.
+    """
+
+    config: IndexConfig
+
+    def execute(self, batch: Sequence[Request]) -> BatchResult:
+        raise NotImplementedError
+
+    def get_batch(self, keys: Sequence[bytes]) -> Tuple[np.ndarray, np.ndarray]:
+        raise NotImplementedError
+
+    @staticmethod
+    def _map_get_results(gets, found, vals, width: int, results) -> None:
+        """(found, values) arrays -> per-op OpResults, written into
+        ``results`` at each get's original batch position.  The single
+        copy of the hit/miss/over-width mapping, shared by every
+        implementation so the typed surfaces cannot drift."""
+        for (i, req), f, v in zip(gets, found.tolist(), vals.tolist()):
+            if len(req.key) > width:
+                results[i] = _REJECTED_OVER_WIDTH
+            elif f:
+                results[i] = OpResult(Status.OK, value=v)
+            else:
+                results[i] = _NOT_FOUND
+
+
+class StringIndex(StringIndexBase):
+    """Single-device LITS over the HPT + sub-trie + PMSS hybrid (PAPER.md §3–§5)."""
+
+    def __init__(self, builder: Optional[LITSBuilder], ti: TensorIndex,
+                 config: IndexConfig):
+        self._builder = builder        # None after load(): rebuilt lazily on merge
+        self.ti = ti
+        self.config = config
+        self._backend = config.resolved_search_backend()
+        self._interpret = config.resolved_interpret()
+        self.merge_count = 0
+        self._host_pool = None         # lazy (key_bytes, ent_off, ent_len) copies
+        # fill fraction mirrored on host: every delta mutation goes through
+        # put_batch/merge on this object, so the mirror stays exact and
+        # read paths never pay a device sync for it
+        self._delta_fill = delta_fill_fraction(ti)
+
+    # -- lifecycle ----------------------------------------------------------
+
+    @classmethod
+    def bulk_load(cls, keys: Sequence[bytes],
+                  values: Optional[np.ndarray] = None,
+                  config: Optional[IndexConfig] = None) -> "StringIndex":
+        """Paper Sec. 3.1: sample -> HPT -> collision-driven build -> freeze."""
+        cfg = config or IndexConfig()
+        builder = LITSBuilder(config=cfg.builder)
+        vals = (np.asarray(values, np.int64) if values is not None
+                else np.arange(len(keys), dtype=np.int64))
+        builder.bulkload(StringSet.from_list(list(keys)), vals, width=cfg.width)
+        ti = freeze(builder, delta_capacity=cfg.delta_capacity,
+                    delta_bytes=cfg.delta_bytes, delta_probes=cfg.delta_probes)
+        return cls(builder, ti, cfg)
+
+    @classmethod
+    def from_builder(cls, builder: LITSBuilder,
+                     config: Optional[IndexConfig] = None) -> "StringIndex":
+        """Wrap an already bulk-loaded host builder (custom PMSS/HPT/host
+        model variants — the power-user seam the benchmarks use)."""
+        cfg = config or IndexConfig()
+        ti = freeze(builder, delta_capacity=cfg.delta_capacity,
+                    delta_bytes=cfg.delta_bytes, delta_probes=cfg.delta_probes)
+        return cls(builder, ti, cfg)
+
+    def save(self, path: str) -> None:
+        """Versioned snapshot of the full pytree (base + live delta buffer)."""
+        save_index(self.ti, path)
+
+    @classmethod
+    def load(cls, path: str,
+             config: Optional[IndexConfig] = None) -> "StringIndex":
+        """Restore a snapshot.  ``config`` supplies *runtime* policy only
+        (backends, merge threshold, scan window); the structural parameters
+        (width, delta sizing) come from the snapshot itself."""
+        ti = load_index(path)
+        return cls(None, ti, config or IndexConfig())
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def width(self) -> int:
+        return self.ti.width
+
+    @property
+    def n_entries(self) -> int:
+        return self.ti.n_entries
+
+    @property
+    def delta_fill(self) -> float:
+        return self._delta_fill
+
+    def nbytes(self) -> int:
+        return self.ti.nbytes()
+
+    # -- batched primitives (each is ONE fused dispatch) --------------------
+
+    def get_batch(self, keys: Sequence[bytes]) -> Tuple[np.ndarray, np.ndarray]:
+        """Point lookups: (found bool mask, int64 values; misses hold 0)."""
+        if not keys:
+            return np.zeros(0, bool), np.zeros(0, np.int64)
+        import jax
+
+        qb, ql = pad_queries(list(keys), self.ti.width)
+        found, eid, isd = search_batch(
+            self.ti, jnp.asarray(qb), jnp.asarray(ql),
+            backend=self._backend, interpret=self._interpret)
+        lo, hi = lookup_values(self.ti, eid, isd)
+        # ONE host sync for the whole get group
+        found, lo, hi = jax.device_get((found, lo, hi))
+        vals = _join_values(lo, hi)
+        return found, np.where(found, vals, 0)
+
+    def put_batch(self, keys: Sequence[bytes],
+                  values: Sequence[int]) -> Tuple[np.ndarray, np.ndarray, bool]:
+        """Upserts: (inserted mask, updated mask, auto-merge ran).
+
+        New keys go to the device delta buffer; existing keys (base or
+        delta) get their value updated in place.  Crossing the configured
+        fill threshold triggers minor compaction (``merge_delta``).
+        """
+        if not len(keys):
+            return np.zeros(0, bool), np.zeros(0, bool), False
+        import jax
+
+        qb, ql = pad_queries(list(keys), self.ti.width)
+        lo, hi = _split_values(np.asarray(values, np.int64))
+        self.ti, ins, upd = insert_batch(
+            self.ti, jnp.asarray(qb), jnp.asarray(ql), lo, hi)
+        # ONE host sync: op masks + the delta state the merge policy needs
+        ins, upd, de_count, overflow = jax.device_get(
+            (ins, upd, self.ti.de_count, self.ti.delta_overflow))
+        self._delta_fill = float(de_count) / self.ti.de_off.shape[0]
+        merged = self._maybe_merge(bool(overflow))
+        return ins, upd, merged
+
+    def scan_batch(self, starts: Sequence[bytes], window: int):
+        """Range scans: (eids (B, window) int32, valid mask) over the frozen order."""
+        qb, ql = pad_queries(list(starts), self.ti.width)
+        return scan_batch(self.ti, jnp.asarray(qb), jnp.asarray(ql),
+                          window, backend=self._backend,
+                          interpret=self._interpret)
+
+    # -- single-op conveniences --------------------------------------------
+
+    def get(self, key: bytes) -> Optional[int]:
+        found, vals = self.get_batch([key])
+        return int(vals[0]) if found[0] else None
+
+    def put(self, key: bytes, value: int) -> OpResult:
+        return self.execute([PutRequest(key, value)]).results[0]
+
+    def scan(self, start: bytes,
+             window: Optional[int] = None) -> List[Tuple[bytes, int]]:
+        res = self.execute([ScanRequest(start, window)]).results[0]
+        return list(res.entries or ())
+
+    # -- the batched entry point -------------------------------------------
+
+    def execute(self, batch: Sequence[Request]) -> BatchResult:
+        """Plan + run a mixed GET/PUT/SCAN batch as grouped fused dispatches.
+
+        Puts apply first (one ``insert_batch``), then gets (one
+        ``search_batch``) and scans (one ``scan_batch`` per distinct
+        window) observe the post-put index.  Per-op failures come back as
+        :class:`Status` codes; the only exceptions raised are for malformed
+        requests (unknown op types).
+        """
+        results: List[Optional[OpResult]] = [None] * len(batch)
+        gets: List[Tuple[int, GetRequest]] = []
+        puts: List[Tuple[int, PutRequest]] = []
+        scans: List[Tuple[int, ScanRequest]] = []
+        for i, req in enumerate(batch):
+            if isinstance(req, GetRequest):
+                gets.append((i, req))
+            elif isinstance(req, PutRequest):
+                puts.append((i, req))
+            elif isinstance(req, ScanRequest):
+                scans.append((i, req))
+            else:
+                raise TypeError(f"unknown request type: {type(req).__name__}")
+
+        merged = False
+        width = self.ti.width
+        if puts:
+            ins, upd, merged = self.put_batch(
+                [r.key for _, r in puts], [r.value for _, r in puts])
+            for (i, req), in_, up in zip(puts, ins.tolist(), upd.tolist()):
+                if len(req.key) > width:
+                    results[i] = _REJECTED_OVER_WIDTH
+                elif in_ or up:
+                    results[i] = _PUT_UPDATED if up else _PUT_OK
+                else:
+                    results[i] = _REJECTED_FULL
+
+        if gets:
+            found, vals = self.get_batch([r.key for _, r in gets])
+            self._map_get_results(gets, found, vals, width, results)
+
+        if scans:
+            import jax
+
+            by_window: Dict[int, List[Tuple[int, ScanRequest]]] = {}
+            for i, req in scans:
+                w = self.config.scan_window if req.window is None else req.window
+                by_window.setdefault(w, []).append((i, req))
+            pool, ent_off, ent_len = self._host_entries()
+            for w, group in by_window.items():
+                eids, valid = self.scan_batch([r.start for _, r in group], w)
+                vlo, vhi = lookup_values(
+                    self.ti, jnp.maximum(eids, 0), jnp.zeros_like(eids, bool))
+                # ONE host sync per scan group
+                eids, valid, vlo, vhi = jax.device_get((eids, valid, vlo, vhi))
+                vals = _join_values(vlo, vhi)
+                for row, (i, req) in enumerate(group):
+                    entries = tuple([
+                        (pool[ent_off[e]: ent_off[e] + ent_len[e]].tobytes(), v)
+                        for e, v, ok in zip(eids[row].tolist(),
+                                            vals[row].tolist(),
+                                            valid[row].tolist())
+                        if ok
+                    ])
+                    results[i] = OpResult(Status.OK, entries=entries)
+
+        return BatchResult(
+            results=results,  # type: ignore[arg-type]
+            n_get=len(gets), n_put=len(puts), n_scan=len(scans),
+            merged=merged, delta_fill=self._delta_fill,
+        )
+
+    # -- compaction ---------------------------------------------------------
+
+    def merge(self) -> None:
+        """Minor compaction: replay the delta buffer into the host builder,
+        re-freeze.  Runs automatically from ``execute``/``put_batch`` when
+        the fill fraction crosses ``config.auto_merge_threshold``."""
+        self.ti = merge_delta(self._ensure_builder(), self.ti)
+        self.merge_count += 1
+        self._host_pool = None
+        self._delta_fill = 0.0  # re-freeze starts an empty delta buffer
+
+    def _maybe_merge(self, overflow: bool) -> bool:
+        thr = self.config.auto_merge_threshold
+        if thr is None:
+            # policy disabled: the delta epoch is pinned — on overflow,
+            # further puts come back Status.REJECTED_FULL until the caller
+            # invokes merge() explicitly
+            return False
+        if overflow or self._delta_fill >= thr:
+            self.merge()
+            return True
+        return False
+
+    def _ensure_builder(self) -> LITSBuilder:
+        """The host builder; reconstructed from the live base pools after
+        ``load`` (a snapshot carries no host state).  The rebuilt builder
+        retrains its HPT, so post-merge entry ids may differ from the
+        pre-snapshot lineage — key->value results are unaffected."""
+        if self._builder is None:
+            pool, ent_off, ent_len = self._host_entries()
+            vals = _join_values(self.ti.ent_val_lo, self.ti.ent_val_hi)
+            n = self.ti.n_entries
+            keys = [pool[ent_off[i]: ent_off[i] + ent_len[i]].tobytes()
+                    for i in range(n)]
+            b = LITSBuilder(config=self.config.builder)
+            b.bulkload(StringSet.from_list(keys), vals[:n], width=self.ti.width)
+            self._builder = b
+        return self._builder
+
+    # -- host-side key pool (scans return real key bytes) -------------------
+
+    def _host_entries(self):
+        if self._host_pool is None:
+            import jax
+
+            self._host_pool = (
+                np.asarray(jax.device_get(self.ti.key_bytes)),
+                np.asarray(jax.device_get(self.ti.ent_off)),
+                np.asarray(jax.device_get(self.ti.ent_len)),
+            )
+        return self._host_pool
+
+    def _entry_key(self, eid: int) -> bytes:
+        pool, ent_off, ent_len = self._host_entries()
+        return pool[ent_off[eid]: ent_off[eid] + ent_len[eid]].tobytes()

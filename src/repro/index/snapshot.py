@@ -1,0 +1,99 @@
+"""Versioned device-index snapshots: ``TensorIndex`` <-> one ``.npz`` file.
+
+Format (DESIGN.md §8): a standard numpy ``.npz`` archive whose first member
+is ``__snapshot_meta__`` — a uint8-encoded JSON header carrying
+
+* ``magic``   — ``"lits-snapshot"`` (format identification),
+* ``version`` — integer format version (``SNAPSHOT_VERSION``),
+* ``meta``    — the static ``TensorIndex`` metadata (width, iteration
+  bounds, cnode capacity, delta probe count, cdf steps),
+* ``data_fields`` — the ordered list of array members.
+
+Every array leaf of the pytree (base pools AND the live delta buffer) is
+stored with its exact dtype, so a loaded index reproduces bit-identical
+``search_batch``/``rank_batch`` results — the roundtrip contract tested in
+tests/test_string_index.py.  Loading a file with an unknown magic raises
+:class:`SnapshotFormatError`; a known magic with an unsupported version
+raises :class:`SnapshotVersionError` (never a silent reinterpretation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tensor_index import STATIC_FIELDS, TensorIndex
+
+SNAPSHOT_MAGIC = "lits-snapshot"
+SNAPSHOT_VERSION = 1
+SUPPORTED_VERSIONS: Tuple[int, ...] = (1,)
+
+_META_KEY = "__snapshot_meta__"
+_META_FIELDS = STATIC_FIELDS
+
+
+class SnapshotError(Exception):
+    """Base class for snapshot load/save failures."""
+
+
+class SnapshotFormatError(SnapshotError):
+    """The file is not a LITS snapshot (missing/garbled header)."""
+
+
+class SnapshotVersionError(SnapshotError):
+    """The file is a LITS snapshot of an unsupported format version."""
+
+
+def _data_fields() -> list:
+    return [f.name for f in dataclasses.fields(TensorIndex)
+            if f.name not in _META_FIELDS]
+
+
+def save_index(ti: TensorIndex, path: str) -> None:
+    """Write a versioned snapshot of the full pytree (base + delta) to ``path``."""
+    arrays = {
+        name: np.asarray(jax.device_get(getattr(ti, name)))
+        for name in _data_fields()
+    }
+    header = {
+        "magic": SNAPSHOT_MAGIC,
+        "version": SNAPSHOT_VERSION,
+        "meta": {k: int(getattr(ti, k)) for k in _META_FIELDS},
+        "data_fields": sorted(arrays),
+    }
+    meta = np.frombuffer(json.dumps(header).encode("utf-8"), dtype=np.uint8)
+    # explicit file handle: np.savez would silently append ".npz" to a bare
+    # path, breaking save(path)/load(path) symmetry
+    with open(path, "wb") as f:
+        np.savez_compressed(f, **{_META_KEY: meta}, **arrays)
+
+
+def load_index(path: str) -> TensorIndex:
+    """Read a snapshot written by :func:`save_index`; validates magic + version."""
+    with np.load(path, allow_pickle=False) as z:
+        if _META_KEY not in z.files:
+            raise SnapshotFormatError(
+                f"{path}: not a LITS snapshot (missing {_META_KEY} header)")
+        try:
+            header = json.loads(bytes(z[_META_KEY]).decode("utf-8"))
+        except (UnicodeDecodeError, json.JSONDecodeError) as e:
+            raise SnapshotFormatError(f"{path}: garbled snapshot header") from e
+        if header.get("magic") != SNAPSHOT_MAGIC:
+            raise SnapshotFormatError(
+                f"{path}: bad magic {header.get('magic')!r} "
+                f"(expected {SNAPSHOT_MAGIC!r})")
+        version = header.get("version")
+        if version not in SUPPORTED_VERSIONS:
+            raise SnapshotVersionError(
+                f"{path}: snapshot format version {version!r}; this build "
+                f"supports {SUPPORTED_VERSIONS}")
+        missing = [n for n in _data_fields() if n not in z.files]
+        if missing:
+            raise SnapshotFormatError(f"{path}: snapshot missing pools {missing}")
+        kw = {name: jnp.asarray(z[name]) for name in _data_fields()}
+    kw.update({k: int(header["meta"][k]) for k in _META_FIELDS})
+    return TensorIndex(**kw)

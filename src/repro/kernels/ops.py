@@ -25,7 +25,10 @@ import jax.numpy as jnp
 from .cnode_probe import cnode_probe_pallas
 from .hpt_cdf import hpt_cdf_pallas
 from .hpt_locate import hpt_locate_pallas
+from .rank import fused_rank_pallas
 from .traverse import fused_search_pallas
+
+KERNEL_BACKENDS = ("auto", "interpret", "native")
 
 
 @functools.lru_cache(maxsize=1)
@@ -39,6 +42,27 @@ def _interpret_default() -> bool:
         raise ValueError(
             f"REPRO_KERNEL_BACKEND={mode!r}: expected auto|interpret|native")
     return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(mode: str | None = None) -> bool:
+    """Explicit kernel-backend name -> interpret flag; ``None``/"auto" -> env.
+
+    This is the config-over-env seam used by :class:`repro.index.IndexConfig`:
+    an explicit ``kernel_backend`` in the config wins over the
+    ``REPRO_KERNEL_BACKEND`` environment variable, which remains the
+    process-wide default.
+    """
+    if mode is None:
+        return _interpret_default()
+    m = mode.strip().lower()
+    if m in ("", "auto"):
+        return _interpret_default()
+    if m in ("interpret", "cpu"):
+        return True
+    if m in ("native", "mosaic", "tpu"):
+        return False
+    raise ValueError(
+        f"unknown kernel backend {mode!r}; expected one of {KERNEL_BACKENDS}")
 
 
 def hpt_cdf(qbytes, qlens, start=0, *, cdf_tab, prob_tab, variant: str = "gather",
@@ -71,6 +95,21 @@ def cnode_probe(hashes, qhash, cnt, frm=None, *, block_b: int = 512,
     """First matching h-pointer slot per query (or -1)."""
     return cnode_probe_pallas(
         hashes, qhash, cnt, frm, block_b=block_b,
+        interpret=_interpret_default() if interpret is None else interpret,
+    )
+
+
+def fused_rank(ti, qbytes, qlens, *, block_b: int = 256,
+               interpret: bool | None = None):
+    """Fused ordered-rank over a :class:`~repro.core.tensor_index.TensorIndex`.
+
+    Returns (B,) int32 ranks into ``ti.ent_sorted`` — bit-identical to the
+    jnp reference (`rank_batch`, shared impl ``core.walk.rank_sorted``).
+    ``ti`` is duck-typed to avoid a core import.
+    """
+    return fused_rank_pallas(
+        qbytes, jnp.asarray(qlens, jnp.int32), ti.ent_sorted, ti.ent_off,
+        ti.ent_len, ti.key_bytes, rank_iters=ti.rank_iters, block_b=block_b,
         interpret=_interpret_default() if interpret is None else interpret,
     )
 

@@ -1,0 +1,95 @@
+"""Pallas kernel: fused ordered-rank (the range-scan entry point).
+
+``rank_batch`` is the first half of every range scan: a per-query binary
+search over the frozen sorted entry order, each probe gathering a key window
+from the byte pool and running a full string compare.  The jnp reference
+launches one XLA gather cascade per binary-search step and re-touches HBM
+for every query's bytes at every step; here the sorted-order table, entry
+tables and key pool ride whole into VMEM and the ``rank_iters`` probes run
+inside one kernel per query block.
+
+Bit-exactness contract (DESIGN.md §7/§8): the kernel body calls the *same*
+binary-search implementation the jnp backend uses —
+:func:`repro.core.walk.rank_sorted` over flat pools, built on
+:func:`repro.kernels.strops.str_cmp_full` — so the returned ranks are
+bit-identical to the reference by construction, not by tolerance.
+
+Off-TPU the kernel executes with ``interpret=True`` (resolved once per
+process in :mod:`repro.kernels.ops`); on TPU the tables' BlockSpecs map
+every pool whole into VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.walk import rank_sorted
+
+DEFAULT_BLOCK_B = 256
+
+
+def _rank_kernel(
+    qbytes_ref, qlens_ref,
+    ent_sorted_ref, ent_off_ref, ent_len_ref, key_bytes_ref,
+    rank_ref,
+    *, rank_iters: int,
+):
+    qbytes = qbytes_ref[...]                 # (BB, W) uint8
+    qlens = qlens_ref[...][:, 0]             # (BB,)
+    ent_sorted = ent_sorted_ref[0, :]
+    ent_off = ent_off_ref[0, :]
+    ent_len = ent_len_ref[0, :]
+    key_bytes = key_bytes_ref[0, :]
+    # the SAME binary search the jnp backend runs (core.walk.rank_sorted)
+    r = rank_sorted(
+        qbytes, qlens, ent_sorted, ent_off, ent_len, key_bytes,
+        rank_iters=rank_iters,
+    )
+    rank_ref[...] = r[:, None]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("rank_iters", "block_b", "interpret"),
+)
+def fused_rank_pallas(
+    qbytes: jax.Array,        # (B, W) uint8, zero padded
+    qlens: jax.Array,         # (B,) int32
+    ent_sorted: jax.Array,
+    ent_off: jax.Array,
+    ent_len: jax.Array,
+    key_bytes: jax.Array,
+    *,
+    rank_iters: int,
+    block_b: int = DEFAULT_BLOCK_B,
+    interpret: bool = True,
+):
+    """Fused ordered rank: returns (B,) int32 ranks into ``ent_sorted``.
+
+    Tables ride whole into the kernel (one ``(1, N)`` VMEM-resident block
+    each) while queries stream in ``block_b``-row blocks over the grid —
+    the same layout as the fused traversal engine.
+    """
+    B, W = qbytes.shape
+    Bp = ((B + block_b - 1) // block_b) * block_b
+    qb = jnp.zeros((Bp, W), qbytes.dtype).at[:B].set(qbytes)
+    ql = jnp.zeros((Bp, 1), jnp.int32).at[:B, 0].set(qlens.astype(jnp.int32))
+    tables2d = [t.reshape(1, -1) for t in (ent_sorted, ent_off, ent_len, key_bytes)]
+
+    def _blockspec(shape):
+        return pl.BlockSpec(shape, lambda i: (0, 0))
+
+    qspec = pl.BlockSpec((block_b, W), lambda i: (i, 0))
+    vspec = pl.BlockSpec((block_b, 1), lambda i: (i, 0))
+    in_specs = [qspec, vspec] + [_blockspec(t.shape) for t in tables2d]
+    rank = pl.pallas_call(
+        functools.partial(_rank_kernel, rank_iters=rank_iters),
+        grid=(Bp // block_b,),
+        in_specs=in_specs,
+        out_specs=vspec,
+        out_shape=jax.ShapeDtypeStruct((Bp, 1), jnp.int32),
+        interpret=interpret,
+    )(qb, ql, *tables2d)
+    return rank[:B, 0]

@@ -25,13 +25,17 @@ class ServeEngine:
     """Greedy batched decoding with exact-prefix KV reuse via LITS."""
 
     def __init__(self, model: LMModel, params, cache_capacity: int = 1024,
-                 index_backend: Optional[str] = None):
+                 index_backend: Optional[str] = None,
+                 index_config=None):
         self.model = model
         self.params = params
-        # index_backend: LITS traversal backend for prompt-cache lookups
-        # ("jnp" | "pallas" | None -> REPRO_SEARCH_BACKEND, DESIGN.md §7)
+        # index_config: a repro.index.IndexConfig for the prompt cache
+        # (unified policy, DESIGN.md §8).  index_backend is the legacy
+        # shorthand for just the traversal backend ("jnp" | "pallas" |
+        # None -> REPRO_SEARCH_BACKEND); ignored when index_config is given.
         self.prefix_cache = PrefixCache(capacity=cache_capacity,
-                                        backend=index_backend)
+                                        backend=index_backend,
+                                        config=index_config)
         self.prefill_fn = jax.jit(model.prefill, static_argnames=("max_len",))
         self.decode_fn = jax.jit(model.decode_step)
         self.max_len = 512

@@ -3,21 +3,22 @@
 This is the paper's index doing the string-keyed job LLM serving actually
 has: request routing by prompt identity.  Keys are prompt byte strings
 (tokenizer-independent), values are slot ids in a host-side cache store.
-Lookups run the batched jitted LITS search; insertions use the device delta
-buffer and are merged (minor compaction) when it fills — the serving loop
-never blocks on a host rebuild.
+
+The cache is a thin consumer of :class:`repro.index.StringIndex`
+(DESIGN.md §8): lookups and admissions are typed ``execute`` batches (one
+fused dispatch per op kind), insertions land in the device delta buffer,
+and minor compaction is the facade's auto-merge — the serving loop never
+polls ``delta_fill_fraction`` by hand.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (
-    LITSBuilder, StringSet, freeze, insert_batch, lookup_values,
-    merge_delta, pad_queries, search_batch,
+from repro.index import (
+    GetRequest, IndexConfig, PutRequest, Status, StringIndex,
 )
 
 
@@ -38,37 +39,37 @@ class PrefixCache:
     """Exact-match prompt -> slot id, LITS-indexed."""
 
     def __init__(self, capacity: int = 4096, width: int = 256, seed_keys=None,
-                 backend: Optional[str] = None):
-        self.builder = LITSBuilder()
+                 backend: Optional[str] = None,
+                 config: Optional[IndexConfig] = None):
+        # `config` is the unified policy object; the legacy kwargs
+        # (capacity/width/backend) are defaults folded into it.
+        if config is None:
+            config = IndexConfig(width=width, delta_capacity=capacity,
+                                 search_backend=backend)
         seed = seed_keys or [b"\x01<prefix-cache-sentinel>"]
-        self.builder.bulkload(StringSet.from_list(seed, width=width), width=width)
-        self.index = freeze(self.builder, delta_capacity=capacity)
+        self.index = StringIndex.bulk_load(seed, config=config)
         self.store: Dict[int, object] = {}
         self._next_slot = 0
-        # traversal backend (DESIGN.md §7): None -> REPRO_SEARCH_BACKEND env
-        self.backend = backend
         self.stats = PrefixCacheStats()
 
     def lookup(self, prompts: List[bytes]) -> Tuple[np.ndarray, np.ndarray]:
-        """Returns (hit mask, slot ids)."""
-        qb, ql = pad_queries(prompts, self.index.width)
-        found, eid, isd = search_batch(
-            self.index, jnp.asarray(qb), jnp.asarray(ql), backend=self.backend)
-        lo, hi = lookup_values(self.index, eid, isd)
-        slots = np.asarray(lo)
-        found = np.asarray(found)
+        """Returns (hit mask, slot ids); misses get slot -1."""
+        res = self.index.execute([GetRequest(p) for p in prompts])
+        found = np.array([r.status == Status.OK for r in res.results], bool)
+        slots = np.array([r.value if r.ok else -1 for r in res.results],
+                         np.int64)
         # sentinel key is never a real hit
         self.stats.hits += int(found.sum())
         self.stats.misses += int((~found).sum())
-        return found, np.where(found, slots, -1)
+        return found, slots
 
     def admit(self, prompts: List[bytes], states: List[object]) -> np.ndarray:
         """Insert prompt->state pairs; returns assigned slot ids (-1 = refused).
 
-        ``insert_batch`` can refuse a key (over-width prompt, full delta
-        pool): those states are dropped again — keeping them would leak an
-        unreachable KV entry per refused prompt, since lookup can never
-        return its slot.
+        A put can be refused per-op (over-width prompt, full delta pool —
+        `Status.REJECTED_*`): those states are dropped again — keeping them
+        would leak an unreachable KV entry per refused prompt, since lookup
+        can never return its slot.
         """
         slots = []
         for st in states:
@@ -76,23 +77,16 @@ class PrefixCache:
             self._next_slot += 1
             self.store[sid] = st
             slots.append(sid)
-        qb, ql = pad_queries(prompts, self.index.width)
-        vals = np.asarray(slots, np.int64)
-        self.index, ins, upd = insert_batch(
-            self.index, jnp.asarray(qb), jnp.asarray(ql),
-            jnp.asarray((vals & 0xFFFFFFFF).astype(np.uint32).view(np.int32)),
-            jnp.asarray((vals >> 32).astype(np.int32)),
-        )
-        indexed = np.asarray(ins) | np.asarray(upd)
+        res = self.index.execute(
+            [PutRequest(p, s) for p, s in zip(prompts, slots)])
+        indexed = np.array([r.ok for r in res.results], bool)
         out = np.asarray(slots)
         for sid in out[~indexed]:
             self.store.pop(int(sid), None)
         out = np.where(indexed, out, -1)
-        self.stats.inserts += int(np.asarray(ins).sum())
-        if bool(self.index.delta_overflow) or (
-            float(self.index.de_count) / self.index.de_off.shape[0] > 0.75
-        ):
-            self.index = merge_delta(self.builder, self.index)
+        self.stats.inserts += sum(
+            1 for r in res.results if r.ok and not r.updated)
+        if res.merged:
             self.stats.merges += 1
         return out
 

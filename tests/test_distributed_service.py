@@ -30,11 +30,12 @@ mesh = jax.make_mesh((8,), ("data",))
 # spread the stacked index over the mesh (leading shard axis -> 'data')
 from jax.sharding import NamedSharding, PartitionSpec as P
 import dataclasses as dc
+from repro.core.tensor_index import STATIC_FIELDS
 stk = sidx.stacked
 put = {}
 for f in dc.fields(type(stk)):
     v = getattr(stk, f.name)
-    if f.name in ("width", "max_iters", "cnode_cap", "rank_iters", "delta_probes", "cdf_steps"):
+    if f.name in STATIC_FIELDS:
         put[f.name] = v
     else:
         put[f.name] = jax.device_put(v, NamedSharding(mesh, P("data")))
@@ -64,11 +65,24 @@ for j, q in enumerate(queries):
     else:
         if found[j]:
             errors += 1
+# --- the same service through the StringIndex facade (DESIGN.md §8) ---
+from repro.distributed.index_service import DistributedStringIndex
+from repro.index import GetRequest, PutRequest, Status
+
+dsi = DistributedStringIndex(sidx, mesh, per_dest_capacity=256)
+f2, v2 = dsi.get_batch(queries)
+facade_errors = int((f2 != found).sum()) + int((v2[found] != got_vals[found]).sum())
+res = dsi.execute([GetRequest(queries[1]), GetRequest(b"definitely-missing"),
+                   PutRequest(b"x", 1)])
+facade_statuses = [r.status.name for r in res.results]
 print(json.dumps({
     "errors": int(errors),
     "n": Q,
     "overflow": int(np.asarray(overflow).sum()),
     "hits": int(found.sum()),
+    "facade_errors": facade_errors,
+    "facade_statuses": facade_statuses,
+    "facade_first_ok": res.results[0].value == kv.get(queries[1]),
 }))
 """
 
@@ -84,3 +98,7 @@ def test_sharded_service_subprocess():
     assert rec["errors"] == 0, rec
     assert rec["overflow"] == 0
     assert 0 < rec["hits"] < rec["n"]
+    # the facade path must agree with the raw service_fn bit-for-bit
+    assert rec["facade_errors"] == 0, rec
+    assert rec["facade_statuses"] == ["OK", "NOT_FOUND", "UNSUPPORTED"], rec
+    assert rec["facade_first_ok"] is True, rec

@@ -102,7 +102,7 @@ def test_kernel_matches_index_positions(setup):
 
 from repro.core import (  # noqa: E402
     LITSBuilder, freeze, insert_batch, lookup_values, merge_delta,
-    pad_queries, resolve_search_backend, search_batch,
+    pad_queries, rank_batch, resolve_search_backend, scan_batch, search_batch,
 )
 from repro.core.strings import key_hash16  # noqa: E402
 from repro.kernels.strops import hash16, hash32  # noqa: E402
@@ -186,6 +186,46 @@ def test_backend_bit_identical_with_delta_hits(rng):
     for a, c in zip(out_j, out_p):
         assert (np.asarray(a) == np.asarray(c)).all()
     assert int(out_j[2].sum()) == 80  # exactly the delta keys
+
+
+@pytest.mark.parametrize("corpus", ["skewed", "longkey", "mixed"])
+def test_rank_backend_bit_identical(rng, corpus):
+    """Fused Pallas rank == jnp reference (shared core.walk.rank_sorted)."""
+    import bisect
+
+    keys, queries = {
+        "skewed": _skewed_prefix_corpus,
+        "longkey": _long_key_corpus,
+        "mixed": _mixed_corpus,
+    }[corpus](rng)
+    b, ti = _build_index(keys)
+    qb, ql = pad_queries(queries, ti.width)
+    qb, ql = jnp.asarray(qb), jnp.asarray(ql)
+    r_j = np.asarray(rank_batch(ti, qb, ql, backend="jnp"))
+    r_p = np.asarray(rank_batch(ti, qb, ql, backend="pallas"))
+    assert (r_j == r_p).all()
+    # ground truth for in-width queries (over-width rows carry the length
+    # sentinel, whose tie-break intentionally differs from raw bisect)
+    for q, got in zip(queries, r_j):
+        if len(q) <= ti.width:
+            assert got == bisect.bisect_left(keys, q), q
+
+
+def test_scan_backend_bit_identical(rng):
+    """scan_batch honors the backend and both engines agree bit-for-bit."""
+    keys = sorted(set(random_strings(rng, 700, 2, 20)))
+    b, ti = _build_index(keys)
+    starts = keys[::13] + [k[:2] for k in keys[:40]] + [b"~~~", b"a"]
+    qb, ql = pad_queries(starts, ti.width)
+    qb, ql = jnp.asarray(qb), jnp.asarray(ql)
+    e_j, v_j = scan_batch(ti, qb, ql, 11, backend="jnp")
+    e_p, v_p = scan_batch(ti, qb, ql, 11, backend="pallas")
+    assert (np.asarray(e_j) == np.asarray(e_p)).all()
+    assert (np.asarray(v_j) == np.asarray(v_p)).all()
+    # oracle: first window of >= start in sorted order
+    got0 = [b.key_at(int(e)) for e, ok in
+            zip(np.asarray(e_j)[0], np.asarray(v_j)[0]) if ok]
+    assert got0 == [k for k in keys if k >= starts[0]][:11]
 
 
 def test_fused_levels_counter(rng):

@@ -1,0 +1,259 @@
+"""StringIndex facade: batch planning, per-op statuses, auto-merge, snapshots.
+
+The acceptance contract (ISSUE 2 / DESIGN.md §8):
+
+* ``execute`` on a mixed GET/PUT/SCAN batch is bit-identical to the
+  equivalent sequence of legacy free-function calls, on BOTH traversal
+  backends;
+* failures (over-width keys, full delta pool) surface as per-op Status
+  codes, never exceptions;
+* puts past the delta threshold trigger ``merge_delta`` automatically and
+  subsequent gets/scans see the merged keys;
+* a ``save``/``load`` roundtrip reproduces bit-identical ``search_batch``
+  results, and version mismatches raise typed errors.
+"""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    insert_batch, lookup_values, pad_queries, rank_batch, scan_batch,
+    search_batch,
+)
+from repro.core.strings import random_strings
+from repro.index import (
+    GetRequest, IndexConfig, PutRequest, ScanRequest, SnapshotFormatError,
+    SnapshotVersionError, Status, StringIndex,
+)
+
+
+def _corpus(rng, n=600):
+    keys = sorted(set(random_strings(rng, n, 2, 24)))
+    vals = np.arange(len(keys), dtype=np.int64) * 5 + 1
+    return keys, vals
+
+
+def _legacy_plan(ti, batch, scan_window):
+    """The equivalent sequence of legacy free-function calls (the plan
+    ``execute`` promises: one insert_batch, one search_batch, one
+    scan_batch — puts first)."""
+    puts = [r for r in batch if isinstance(r, PutRequest)]
+    gets = [r for r in batch if isinstance(r, GetRequest)]
+    scans = [r for r in batch if isinstance(r, ScanRequest)]
+    out = {}
+    if puts:
+        qb, ql = pad_queries([r.key for r in puts], ti.width)
+        v = np.asarray([r.value for r in puts], np.int64)
+        ti, ins, upd = insert_batch(
+            ti, jnp.asarray(qb), jnp.asarray(ql),
+            jnp.asarray((v & 0xFFFFFFFF).astype(np.uint32).view(np.int32)),
+            jnp.asarray((v >> 32).astype(np.int32)))
+        out["ins"], out["upd"] = np.asarray(ins), np.asarray(upd)
+    if gets:
+        qb, ql = pad_queries([r.key for r in gets], ti.width)
+        found, eid, isd = search_batch(ti, jnp.asarray(qb), jnp.asarray(ql))
+        lo, hi = lookup_values(ti, eid, isd)
+        out["found"] = np.asarray(found)
+        out["values"] = (np.asarray(hi).astype(np.int64) << 32) | \
+            np.asarray(lo).view(np.uint32).astype(np.int64)
+    if scans:
+        qb, ql = pad_queries([r.start for r in scans], ti.width)
+        eids, valid = scan_batch(ti, jnp.asarray(qb), jnp.asarray(ql), scan_window)
+        out["eids"], out["valid"] = np.asarray(eids), np.asarray(valid)
+    return ti, out
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_execute_bit_identical_to_legacy(rng, backend):
+    keys, vals = _corpus(rng)
+    cfg = IndexConfig(delta_capacity=512, auto_merge_threshold=None,
+                      search_backend=backend, scan_window=9)
+    index = StringIndex.bulk_load(keys, vals, cfg)
+    legacy = StringIndex.bulk_load(keys, vals, cfg)  # identical twin lineage
+
+    batch = (
+        [GetRequest(k) for k in keys[:40]]
+        + [GetRequest(k + b"~miss") for k in keys[:10]]
+        + [PutRequest(b"pp-%03d" % i, 7000 + i) for i in range(30)]
+        + [PutRequest(keys[5], 99991), PutRequest(keys[6], 99992)]  # updates
+        + [GetRequest(b"pp-007"), GetRequest(keys[5])]
+        + [ScanRequest(keys[0]), ScanRequest(keys[100][:3]), ScanRequest(b"~~~")]
+    )
+    res = index.execute(batch)
+    _, want = _legacy_plan(legacy.ti, batch, cfg.scan_window)
+
+    gets = [r for r, q in zip(res.results, batch) if isinstance(q, GetRequest)]
+    assert [r.ok for r in gets] == want["found"].tolist()
+    got_vals = [r.value if r.ok else 0 for r in gets]
+    assert got_vals == np.where(want["found"], want["values"], 0).tolist()
+    puts = [r for r, q in zip(res.results, batch) if isinstance(q, PutRequest)]
+    assert [r.ok for r in puts] == (want["ins"] | want["upd"]).tolist()
+    assert [r.updated for r in puts] == want["upd"].tolist()
+    scans = [r for r, q in zip(res.results, batch) if isinstance(q, ScanRequest)]
+    for row, r in enumerate(scans):
+        want_eids = [int(e) for e, ok in zip(want["eids"][row],
+                                             want["valid"][row]) if ok]
+        want_keys = [legacy._entry_key(e) for e in want_eids]
+        assert [k for k, _ in r.entries] == want_keys
+
+
+def test_per_op_error_statuses_not_exceptions(rng):
+    keys, vals = _corpus(rng, 200)
+    cfg = IndexConfig(delta_capacity=8, delta_bytes=64,
+                      auto_merge_threshold=None)
+    index = StringIndex.bulk_load(keys, vals, cfg)
+    wide = b"w" * (index.width + 1)
+    batch = (
+        [PutRequest(wide, 1), GetRequest(wide)]
+        + [PutRequest(b"f-%04d" % i, i) for i in range(32)]  # overflows cap=8
+        + [GetRequest(keys[0])]
+    )
+    res = index.execute(batch)  # must NOT raise
+    assert res.results[0].status == Status.REJECTED_OVER_WIDTH
+    assert res.results[1].status == Status.REJECTED_OVER_WIDTH
+    statuses = {r.status for r in res.results[2:-1]}
+    assert Status.REJECTED_FULL in statuses  # pool exhausted mid-batch
+    assert res.results[-1].status == Status.OK  # healthy op unaffected
+    assert res.results[-1].value == int(vals[0])
+    # auto_merge_threshold=None pins the delta epoch: even overflow must
+    # NOT trigger an implicit merge — callers invoke merge() themselves
+    assert index.merge_count == 0 and not res.merged
+    index.merge()
+    assert index.merge_count == 1 and index.get(b"f-0000") == 0
+
+
+def test_auto_merge_regression(rng):
+    """Puts past the delta threshold must trigger merge_delta inside
+    ``execute``; subsequent gets AND scans see the merged keys without any
+    caller-side delta_fill_fraction polling."""
+    keys, vals = _corpus(rng, 300)
+    cfg = IndexConfig(delta_capacity=64, auto_merge_threshold=0.5)
+    index = StringIndex.bulk_load(keys, vals, cfg)
+    res1 = index.execute([PutRequest(b"zm-%03d" % i, 100 + i) for i in range(20)])
+    assert not res1.merged and index.merge_count == 0
+    res2 = index.execute([PutRequest(b"zm-%03d" % i, 100 + i) for i in range(20, 40)])
+    assert res2.merged and index.merge_count == 1  # 40/64 >= 0.5
+    assert int(index.ti.de_count) == 0 and res2.delta_fill == 0.0
+    res3 = index.execute(
+        [GetRequest(b"zm-%03d" % i) for i in range(40)]
+        + [ScanRequest(b"zm-", 12)])
+    for i, r in enumerate(res3.results[:40]):
+        assert r.status == Status.OK and r.value == 100 + i
+    # merged keys are in the frozen order now -> scannable
+    assert [k for k, _ in res3.results[40].entries] == \
+        [b"zm-%03d" % i for i in range(12)]
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_save_load_roundtrip_bit_identical(rng, tmp_path, backend):
+    keys, vals = _corpus(rng, 400)
+    index = StringIndex.bulk_load(keys, vals, IndexConfig(
+        delta_capacity=128, auto_merge_threshold=None))
+    # live delta state rides into the snapshot too
+    index.execute([PutRequest(b"dl-%03d" % i, i) for i in range(30)])
+    path = tmp_path / "idx.snap"
+    index.save(str(path))
+    restored = StringIndex.load(str(path))
+
+    probe = keys[::7] + [b"dl-%03d" % i for i in range(30)] + [b"nope-1", b"nope-2"]
+    qb, ql = pad_queries(probe, index.ti.width)
+    qb, ql = jnp.asarray(qb), jnp.asarray(ql)
+    f0, e0, d0 = search_batch(index.ti, qb, ql, backend=backend)
+    f1, e1, d1 = search_batch(restored.ti, qb, ql, backend=backend)
+    assert (np.asarray(f0) == np.asarray(f1)).all()
+    assert (np.asarray(e0) == np.asarray(e1)).all()
+    assert (np.asarray(d0) == np.asarray(d1)).all()
+    r0 = rank_batch(index.ti, qb, ql, backend=backend)
+    r1 = rank_batch(restored.ti, qb, ql, backend=backend)
+    assert (np.asarray(r0) == np.asarray(r1)).all()
+
+
+def test_snapshot_version_and_format_errors(rng, tmp_path):
+    keys, vals = _corpus(rng, 120)
+    index = StringIndex.bulk_load(keys, vals)
+    path = tmp_path / "idx.snap"
+    index.save(str(path))
+
+    z = dict(np.load(str(path), allow_pickle=False))
+    hdr = json.loads(bytes(z["__snapshot_meta__"]).decode())
+    hdr["version"] = 99
+    z["__snapshot_meta__"] = np.frombuffer(json.dumps(hdr).encode(), np.uint8)
+    bad_version = tmp_path / "v99.snap"
+    with open(bad_version, "wb") as f:
+        np.savez_compressed(f, **z)
+    with pytest.raises(SnapshotVersionError):
+        StringIndex.load(str(bad_version))
+
+    hdr["version"] = 1
+    hdr["magic"] = "not-lits"
+    z["__snapshot_meta__"] = np.frombuffer(json.dumps(hdr).encode(), np.uint8)
+    bad_magic = tmp_path / "magic.snap"
+    with open(bad_magic, "wb") as f:
+        np.savez_compressed(f, **z)
+    with pytest.raises(SnapshotFormatError):
+        StringIndex.load(str(bad_magic))
+
+    not_snap = tmp_path / "random.npz"
+    with open(not_snap, "wb") as f:
+        np.savez_compressed(f, a=np.arange(3))
+    with pytest.raises(SnapshotFormatError):
+        StringIndex.load(str(not_snap))
+
+
+def test_config_beats_env(rng, monkeypatch):
+    """Config precedence: explicit field > env var > default (DESIGN.md §8)."""
+    monkeypatch.setenv("REPRO_SEARCH_BACKEND", "pallas")
+    assert IndexConfig(search_backend="jnp").resolved_search_backend() == "jnp"
+    assert IndexConfig().resolved_search_backend() == "pallas"
+    from repro.kernels import ops
+
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", "native")
+    ops._interpret_default.cache_clear()
+    try:
+        assert IndexConfig(kernel_backend="interpret").resolved_interpret() is True
+        assert IndexConfig(kernel_backend="auto").resolved_interpret() is False
+        assert IndexConfig().resolved_interpret() is None  # defer to env at call
+    finally:
+        ops._interpret_default.cache_clear()
+    with pytest.raises(ValueError):
+        IndexConfig(kernel_backend="bogus").resolved_interpret()
+    with pytest.raises(ValueError):
+        IndexConfig(search_backend="bogus").resolved_search_backend()
+
+
+def test_scan_window_grouping_and_default(rng):
+    keys, vals = _corpus(rng, 250)
+    index = StringIndex.bulk_load(keys, vals, IndexConfig(scan_window=4))
+    res = index.execute([
+        ScanRequest(keys[0]),            # default window (4)
+        ScanRequest(keys[0], window=8),  # explicit window
+        ScanRequest(keys[3], window=8),
+    ])
+    assert len(res.results[0].entries) == 4
+    assert len(res.results[1].entries) == 8
+    assert [k for k, _ in res.results[0].entries] == keys[:4]
+    assert [k for k, _ in res.results[1].entries] == keys[:8]
+    assert [k for k, _ in res.results[2].entries] == keys[3:11]
+
+
+def test_get_put_convenience_roundtrip(rng):
+    keys, vals = _corpus(rng, 150)
+    index = StringIndex.bulk_load(keys, vals)
+    assert index.get(keys[3]) == int(vals[3])
+    assert index.get(b"absent") is None
+    r = index.put(b"fresh-key", 1234)
+    assert r.ok and not r.updated
+    assert index.get(b"fresh-key") == 1234
+    r2 = index.put(b"fresh-key", 5678)
+    assert r2.ok and r2.updated
+    assert index.get(b"fresh-key") == 5678
+
+
+def test_values_64bit_roundtrip(rng):
+    keys, _ = _corpus(rng, 100)
+    vals = (np.arange(len(keys), dtype=np.int64) << 33) + 12345
+    index = StringIndex.bulk_load(keys, vals)
+    found, got = index.get_batch(keys[:50])
+    assert found.all() and (got == vals[:50]).all()
