@@ -35,7 +35,7 @@ def main() -> None:
     from . import (api_bench, fig1_prefix_skew, fig7_pmss, fig8_ycsb,
                    fig9_ycsb_mixed, fig11_space, fig13_unique_rate,
                    fig14_models, fig15_cnode, fig16_subtrie, kernel_bench,
-                   table2_hardness, table3_height)
+                   service_bench, table2_hardness, table3_height)
 
     n = 3000 if args.quick else 20000
     benches = {
@@ -56,6 +56,9 @@ def main() -> None:
             2000 if args.quick else 8000, 1024 if args.quick else 4096),
         "api": lambda: api_bench.run(3000 if args.quick else 8000,
                                      800 if args.quick else 3000),
+        "service": lambda: service_bench.run(3000 if args.quick else 8000,
+                                             1024 if args.quick else 2048,
+                                             quick=args.quick),
     }
     selected = args.only.split(",") if args.only else list(benches)
     print("name,us_per_call,derived")
@@ -64,18 +67,13 @@ def main() -> None:
         rows = benches[name]()
         dt = time.perf_counter() - t0
         _write_csv(rows, os.path.join(args.out, f"{name}.csv"))
-        if name == "traversal":
-            # jnp-vs-fused comparison artifact (acceptance contract): wall
-            # times + analytic per-query HBM bytes, at the repo root
+        if name in ("traversal", "api", "service"):
+            # repo-root acceptance artifacts: fused-vs-jnp traversal,
+            # facade dispatch overhead (DESIGN.md §8), request-plane
+            # coalescing/throughput (DESIGN.md §9)
             root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-            with open(os.path.join(root, "BENCH_traversal.json"), "w") as f:
-                json.dump({"bench": "traversal", "quick": bool(args.quick),
-                           "rows": rows}, f, indent=2)
-        if name == "api":
-            # facade-vs-free-function dispatch overhead artifact (DESIGN.md §8)
-            root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-            with open(os.path.join(root, "BENCH_api.json"), "w") as f:
-                json.dump({"bench": "api", "quick": bool(args.quick),
+            with open(os.path.join(root, f"BENCH_{name}.json"), "w") as f:
+                json.dump({"bench": name, "quick": bool(args.quick),
                            "rows": rows}, f, indent=2)
         # one summary CSV line per bench module (harness contract)
         n_rows = len(rows)

@@ -18,6 +18,7 @@ from .tensor_index import (
     SEARCH_BACKENDS,
     TensorIndex,
     base_search,
+    delete_batch,
     freeze,
     insert_batch,
     lookup_values,
@@ -34,7 +35,8 @@ __all__ = [
     "get_cdf_jnp", "get_cdf_np64", "positions_jnp", "gpkl", "local_gpkl", "pkl",
     "PMSS", "AlwaysLIT", "AlwaysTrie", "StringSet", "sort_order",
     "TensorIndex", "freeze", "search_batch", "base_search", "insert_batch",
-    "lookup_values", "merge_delta", "pad_queries", "rank_batch", "scan_batch",
+    "delete_batch", "lookup_values", "merge_delta", "pad_queries",
+    "rank_batch", "scan_batch",
     "SEARCH_BACKENDS", "resolve_search_backend",
     "TAG_EMPTY", "TAG_ENTRY", "TAG_MNODE", "TAG_CNODE", "TAG_TRIE",
 ]

@@ -10,6 +10,8 @@ query-side operations are single jitted functions, composable under
 * :func:`rank_batch`     — ordered rank for range scans (binary search)
 * :func:`scan_batch`     — range scan windows over the frozen sort order
 * :func:`insert_batch`   — log-structured delta-buffer inserts (DESIGN.md §2)
+* :func:`delete_batch`   — delta-buffer tombstones (shadow the frozen base;
+  reconciled by :func:`merge_delta`, DESIGN.md §9)
 * :func:`lookup_values`  — (lo, hi) 2×int32 value fetch
 
 The traversal mirrors the host builder bit-for-bit: slot positions come from
@@ -88,7 +90,7 @@ STATIC_FIELDS = ("width", "max_iters", "cnode_cap", "rank_iters",
         "key_bytes", "ent_off", "ent_len", "ent_val_lo", "ent_val_hi",
         "ent_sorted", "cdf_tab", "prob_tab", "root_item",
         "db_bytes", "db_used", "de_off", "de_len", "de_val_lo", "de_val_hi",
-        "de_hash", "de_count", "dh_slot", "delta_overflow",
+        "de_hash", "de_tomb", "de_count", "dh_slot", "delta_overflow",
     ],
     meta_fields=list(STATIC_FIELDS),
 )
@@ -127,6 +129,7 @@ class TensorIndex:
     de_val_lo: jax.Array
     de_val_hi: jax.Array
     de_hash: jax.Array
+    de_tomb: jax.Array           # per-entry tombstone flag (DELETE support)
     de_count: jax.Array
     dh_slot: jax.Array
     delta_overflow: jax.Array
@@ -211,6 +214,7 @@ def freeze(
         de_val_lo=jnp.zeros(dcap, jnp.int32),
         de_val_hi=jnp.zeros(dcap, jnp.int32),
         de_hash=jnp.zeros(dcap, jnp.uint32),
+        de_tomb=jnp.zeros(dcap, bool),
         de_count=jnp.asarray(np.int32(0)),
         dh_slot=jnp.full(hcap, -1, jnp.int32),
         delta_overflow=jnp.asarray(False),
@@ -365,10 +369,13 @@ def base_search(ti: TensorIndex, qbytes: jax.Array, qlens: jax.Array,
 def _search_batch_jit(ti: TensorIndex, qbytes: jax.Array, qlens: jax.Array,
                       backend: str, interpret: bool | None):
     dfound, did = _delta_lookup(ti, qbytes, qlens)
+    # a tombstoned delta entry SHADOWS the base: the key is absent until a
+    # put resurrects it or merge_delta reconciles the delete (DESIGN.md §9)
+    dtomb = dfound & jnp.take(ti.de_tomb, jnp.maximum(did, 0))
     bfound, beid = base_search_impl(ti, qbytes, qlens, backend, interpret)
-    found = dfound | bfound
+    found = jnp.where(dfound, ~dtomb, bfound)
     eid = jnp.where(dfound, did, beid)
-    return found, eid, dfound
+    return found, eid, dfound & ~dtomb
 
 
 def search_batch(ti: TensorIndex, qbytes: jax.Array, qlens: jax.Array,
@@ -378,7 +385,8 @@ def search_batch(ti: TensorIndex, qbytes: jax.Array, qlens: jax.Array,
     ``backend`` picks the traversal engine (``"jnp"`` reference or fused
     ``"pallas"`` kernel); ``None`` resolves from ``REPRO_SEARCH_BACKEND``.
     The delta-buffer probe always runs on the jnp path (mutable state stays
-    outside the kernel).
+    outside the kernel).  Tombstoned delta entries (see :func:`delete_batch`)
+    shadow their base key: such queries report not-found.
     """
     return _search_batch_jit(ti, qbytes, qlens, resolve_search_backend(backend),
                              interpret)
@@ -467,33 +475,34 @@ def scan_batch(ti: TensorIndex, qbytes: jax.Array, qlens: jax.Array,
 # delta-buffer inserts (log-structured; host merge = minor compaction)
 # ---------------------------------------------------------------------------
 
-@jax.jit
-def insert_batch(ti: TensorIndex, kbytes: jax.Array, klens: jax.Array,
-                 val_lo: jax.Array, val_hi: jax.Array):
-    """Functional batched insert.
+def _mutate_batch(ti: TensorIndex, kbytes: jax.Array, klens: jax.Array,
+                  val_lo: jax.Array, val_hi: jax.Array, is_del: jax.Array):
+    """Shared scan under :func:`insert_batch` and :func:`delete_batch`.
 
-    Keys already in the base index get a value update; new keys go to the
-    delta buffer.  Returns (new_ti, inserted_mask, updated_mask).
+    Per-op ``is_del`` selects the mutation: puts upsert (base value update or
+    new delta entry, clearing any tombstone — a put on a deleted key
+    *resurrects* it); deletes set the tombstone on a matching delta entry, or
+    claim a new tombstone entry when the key lives only in the frozen base
+    (the base pool is immutable — shadowing is the only way to unpublish).
 
-    Keys longer than the index width (``klens > width``, the ``pad_queries``
-    truncation sentinel) are REJECTED rather than stored truncated: a
-    truncated alias would hash/compare equal to every other long key sharing
-    its first ``width`` bytes and would corrupt :func:`merge_delta` (which
-    replays the stored byte length).  This mirrors the host builder, where
-    ``LITSBuilder.insert`` raises for over-width keys.  Byte-pool capacity is
-    gated on the key's true length ``kl`` (not the padded width), so inserts
-    that fit are no longer spuriously rejected near a full pool.
+    Returns ``(new_ti, newly, match, prev_live, rejected)`` with per-op masks:
+    ``newly`` — a fresh delta slot was claimed; ``match`` — an existing delta
+    entry was hit; ``prev_live`` — that entry was live (not tombstoned)
+    before this op; ``rejected`` — the op needed a slot and the pool was
+    full (``Status.REJECTED_FULL`` at the facade).
     """
     B, W = kbytes.shape
     item = _traverse(ti, kbytes, klens)
     bfound, beid = _resolve_terminal(ti, kbytes, klens, item)
-    # update base values in-place (functional)
-    upd_idx = jnp.where(bfound, beid, 0)
+    # update base values in-place (functional); deletes never touch values —
+    # they shadow via the delta buffer so merge_delta can reconcile them
+    do_base = bfound & ~is_del
+    upd_idx = jnp.where(do_base, beid, 0)
     ent_val_lo = ti.ent_val_lo.at[upd_idx].set(
-        jnp.where(bfound, val_lo, jnp.take(ti.ent_val_lo, upd_idx)), mode="drop"
+        jnp.where(do_base, val_lo, jnp.take(ti.ent_val_lo, upd_idx)), mode="drop"
     )
     ent_val_hi = ti.ent_val_hi.at[upd_idx].set(
-        jnp.where(bfound, val_hi, jnp.take(ti.ent_val_hi, upd_idx)), mode="drop"
+        jnp.where(do_base, val_hi, jnp.take(ti.ent_val_hi, upd_idx)), mode="drop"
     )
     qh = _hash32(kbytes, klens)
     hcap = ti.dh_slot.shape[0]
@@ -502,8 +511,8 @@ def insert_batch(ti: TensorIndex, kbytes: jax.Array, klens: jax.Array,
 
     def step(carry, x):
         (dh_slot, db_bytes, db_used, de_off, de_len, de_vlo, de_vhi, de_hash,
-         de_count, overflow) = carry
-        kb, kl, vlo, vhi, h, in_base = x
+         de_tomb, de_count, overflow) = carry
+        kb, kl, vlo, vhi, h, in_base, dele = x
         # probe for existing delta entry or first free slot
         def probe(p, pc):
             fslot, match_de, done = pc
@@ -527,14 +536,22 @@ def insert_batch(ti: TensorIndex, kbytes: jax.Array, klens: jax.Array,
         fslot, match_de, _ = jax.lax.fori_loop(
             0, ti.delta_probes, probe, (jnp.int32(-1), jnp.int32(-1), jnp.asarray(False))
         )
-        is_update_delta = match_de >= 0
+        match = match_de >= 0
         mde = jnp.maximum(match_de, 0)
-        de_vlo = de_vlo.at[mde].set(jnp.where(is_update_delta, vlo, jnp.take(de_vlo, mde)))
-        de_vhi = de_vhi.at[mde].set(jnp.where(is_update_delta, vhi, jnp.take(de_vhi, mde)))
+        was_live = match & ~jnp.take(de_tomb, mde)
+        # matched entry: a put refreshes value + clears the tombstone
+        # (resurrect); a delete sets the tombstone and keeps the stale value
+        upd_val = match & ~dele
+        de_vlo = de_vlo.at[mde].set(jnp.where(upd_val, vlo, jnp.take(de_vlo, mde)))
+        de_vhi = de_vhi.at[mde].set(jnp.where(upd_val, vhi, jnp.take(de_vhi, mde)))
+        de_tomb = de_tomb.at[mde].set(jnp.where(match, dele, jnp.take(de_tomb, mde)))
         fits = kl <= W  # over-width keys are unrepresentable: reject, don't truncate
-        can = fits & (~in_base) & (~is_update_delta) & (fslot >= 0) \
+        # a new slot is needed for: put of an unknown key, or delete of a
+        # base-resident key with no delta entry yet (tombstone shadow)
+        want_new = fits & (~match) & jnp.where(dele, in_base, ~in_base)
+        can = want_new & (fslot >= 0) \
             & (de_count < dcap) & (db_used + kl <= dbcap)
-        this_overflow = fits & (~in_base) & (~is_update_delta) & ~can
+        this_overflow = want_new & ~can
         # claim
         did = jnp.where(can, de_count, 0)
         dh_slot = dh_slot.at[jnp.where(can, fslot, hcap)].set(did, mode="drop")
@@ -549,24 +566,77 @@ def insert_batch(ti: TensorIndex, kbytes: jax.Array, klens: jax.Array,
         de_vlo = de_vlo.at[did].set(jnp.where(can, vlo, jnp.take(de_vlo, did)))
         de_vhi = de_vhi.at[did].set(jnp.where(can, vhi, jnp.take(de_vhi, did)))
         de_hash = de_hash.at[did].set(jnp.where(can, h, jnp.take(de_hash, did)))
+        de_tomb = de_tomb.at[did].set(jnp.where(can, dele, jnp.take(de_tomb, did)))
         db_used = jnp.where(can, db_used + kl, db_used)
         de_count = jnp.where(can, de_count + 1, de_count)
         ncarry = (dh_slot, db_bytes, db_used, de_off, de_len, de_vlo, de_vhi,
-                  de_hash, de_count, overflow | this_overflow)
-        return ncarry, (can, is_update_delta | in_base)
+                  de_hash, de_tomb, de_count, overflow | this_overflow)
+        return ncarry, (can, match, was_live, this_overflow)
 
     carry0 = (ti.dh_slot, ti.db_bytes, ti.db_used, ti.de_off, ti.de_len,
-              ti.de_val_lo, ti.de_val_hi, ti.de_hash, ti.de_count, ti.delta_overflow)
-    carry, (ins, upd) = jax.lax.scan(step, carry0, (kbytes, klens, val_lo, val_hi, qh, bfound))
+              ti.de_val_lo, ti.de_val_hi, ti.de_hash, ti.de_tomb, ti.de_count,
+              ti.delta_overflow)
+    carry, (newly, match, prev_live, rejected) = jax.lax.scan(
+        step, carry0, (kbytes, klens, val_lo, val_hi, qh, bfound, is_del))
     (dh_slot, db_bytes, db_used, de_off, de_len, de_vlo, de_vhi, de_hash,
-     de_count, overflow) = carry
+     de_tomb, de_count, overflow) = carry
     nti = dataclasses.replace(
         ti, ent_val_lo=ent_val_lo, ent_val_hi=ent_val_hi, dh_slot=dh_slot,
         db_bytes=db_bytes, db_used=db_used, de_off=de_off, de_len=de_len,
-        de_val_lo=de_vlo, de_val_hi=de_vhi, de_hash=de_hash, de_count=de_count,
-        delta_overflow=overflow,
+        de_val_lo=de_vlo, de_val_hi=de_vhi, de_hash=de_hash, de_tomb=de_tomb,
+        de_count=de_count, delta_overflow=overflow,
     )
+    return nti, bfound, newly, match, prev_live, rejected
+
+
+@jax.jit
+def insert_batch(ti: TensorIndex, kbytes: jax.Array, klens: jax.Array,
+                 val_lo: jax.Array, val_hi: jax.Array):
+    """Functional batched insert.
+
+    Keys already in the base index get a value update; new keys go to the
+    delta buffer.  A put on a tombstoned key resurrects it (clears the
+    tombstone, reported in the inserted mask).  Returns
+    (new_ti, inserted_mask, updated_mask).
+
+    Keys longer than the index width (``klens > width``, the ``pad_queries``
+    truncation sentinel) are REJECTED rather than stored truncated: a
+    truncated alias would hash/compare equal to every other long key sharing
+    its first ``width`` bytes and would corrupt :func:`merge_delta` (which
+    replays the stored byte length).  This mirrors the host builder, where
+    ``LITSBuilder.insert`` raises for over-width keys.  Byte-pool capacity is
+    gated on the key's true length ``kl`` (not the padded width), so inserts
+    that fit are no longer spuriously rejected near a full pool.
+    """
+    B = kbytes.shape[0]
+    nti, in_base, newly, match, prev_live, _rej = _mutate_batch(
+        ti, kbytes, klens, val_lo, val_hi, jnp.zeros(B, bool))
+    ins = newly | (match & ~prev_live)          # fresh key or resurrect
+    upd = prev_live | (in_base & ~match)        # live somewhere -> overwrite
     return nti, ins, upd
+
+
+@jax.jit
+def delete_batch(ti: TensorIndex, kbytes: jax.Array, klens: jax.Array):
+    """Functional batched delete via delta-buffer tombstones (DESIGN.md §9).
+
+    A key living in the delta buffer gets its tombstone flag set in place; a
+    key living only in the frozen base claims a NEW delta entry carrying the
+    tombstone (the base pool is immutable — the shadow is reconciled by
+    :func:`merge_delta`, which replays tombstones as ``builder.delete``).
+    Absent (or already-deleted) keys are a no-op.
+
+    Returns (new_ti, deleted_mask, rejected_mask): ``deleted`` marks keys
+    that existed and are now unpublished; ``rejected`` marks deletes that
+    needed a tombstone slot when the delta pool was full (retry after
+    compaction).  Over-width keys can never be stored, so they come back
+    with both masks False (absent).
+    """
+    B = kbytes.shape[0]
+    z = jnp.zeros(B, jnp.int32)
+    nti, _in_base, newly, _match, prev_live, rejected = _mutate_batch(
+        ti, kbytes, klens, z, z, jnp.ones(B, bool))
+    return nti, newly | prev_live, rejected
 
 
 def delta_fill_fraction(ti: TensorIndex) -> float:
@@ -574,7 +644,11 @@ def delta_fill_fraction(ti: TensorIndex) -> float:
 
 
 def merge_delta(builder: LITSBuilder, ti: TensorIndex) -> TensorIndex:
-    """Minor compaction: replay delta inserts into the host builder, re-freeze."""
+    """Minor compaction: replay delta inserts into the host builder, re-freeze.
+
+    Tombstoned entries (see :func:`delete_batch`) replay as
+    ``builder.delete`` — the point where a shadowed base key is physically
+    removed and stops being scannable."""
     cnt = int(jax.device_get(ti.de_count))
     if cnt:
         db = np.asarray(jax.device_get(ti.db_bytes))
@@ -582,8 +656,12 @@ def merge_delta(builder: LITSBuilder, ti: TensorIndex) -> TensorIndex:
         lens = np.asarray(jax.device_get(ti.de_len))[:cnt]
         vlo = np.asarray(jax.device_get(ti.de_val_lo))[:cnt].view(np.uint32).astype(np.int64)
         vhi = np.asarray(jax.device_get(ti.de_val_hi))[:cnt].astype(np.int64)
+        tomb = np.asarray(jax.device_get(ti.de_tomb))[:cnt]
         for i in range(cnt):
             key = db[offs[i] : offs[i] + lens[i]].tobytes()
+            if tomb[i]:
+                builder.delete(key)
+                continue
             val = int((vhi[i] << 32) | vlo[i])
             if not builder.insert(key, val):
                 builder.update(key, val)

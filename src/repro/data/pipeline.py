@@ -17,7 +17,7 @@ from typing import Dict, Iterator, List, Optional
 
 import numpy as np
 
-from repro.index import IndexConfig, StringIndex
+from repro.index import GetRequest, IndexConfig, PutRequest, Status
 
 
 @dataclasses.dataclass
@@ -63,25 +63,48 @@ class TokenPipeline:
 class RecordStore:
     """String-keyed document store backed by LITS (paper integration point).
 
-    A thin consumer of :class:`repro.index.StringIndex` (DESIGN.md §8):
-    bulk load at construction, batched ``get`` dispatches for dedup and
-    lookup, delta-buffer ``put`` (with the facade's auto-compaction) for
-    incremental inserts — no host refreeze per insert.
+    A client of the :class:`repro.serve.service.IndexService` request plane
+    (DESIGN.md §9): bulk load at construction, typed ``get`` batches for
+    dedup and lookup, delta-buffer ``put`` for incremental inserts — with
+    ``merge_delta`` compaction on the service's maintenance thread rather
+    than inline with a lookup or insert.  Pass ``service`` to share one
+    request plane (and one coalescer) across many pipeline stages.
     """
 
     def __init__(self, keys: List[bytes], payloads: Optional[np.ndarray] = None,
                  backend: Optional[str] = None,
-                 config: Optional[IndexConfig] = None):
-        vals = np.arange(len(keys), dtype=np.int64) if payloads is None else payloads
-        if config is None:
-            # legacy shorthand: just the traversal backend
-            config = IndexConfig(search_backend=backend)
-        self.index = StringIndex.bulk_load(keys, np.asarray(vals, np.int64),
-                                           config)
+                 config: Optional[IndexConfig] = None,
+                 service=None, tenant: Optional[str] = None):
+        from repro.serve.service import IndexService
+
+        self.tenant = tenant
+        self._owns_service = service is None
+        if service is None:
+            vals = (np.arange(len(keys), dtype=np.int64) if payloads is None
+                    else np.asarray(payloads, np.int64))
+            if config is None:
+                # legacy shorthand: just the traversal backend
+                config = IndexConfig(search_backend=backend)
+            # bulk load under the store's tenant namespace so the typed ops
+            # (which the service tenant-prefixes) see the corpus
+            service = IndexService.bulk_load(
+                {tenant or "default": (keys, vals)}, index_config=config)
+        elif keys:
+            # a passed-in service must ALREADY hold the corpus under
+            # `tenant` — silently ignoring `keys` would make every lookup
+            # a miss with no error to explain why
+            raise ValueError(
+                "pass either a corpus to bulk-load (no service) or an "
+                "already-loaded service (with tenant=), not both")
+        self.service = service
 
     def lookup_batch(self, keys: List[bytes]):
-        """Batched device lookup: returns (found mask, payloads/row ids)."""
-        return self.index.get_batch(keys)
+        """Batched coalesced lookup: returns (found mask, payloads/row ids)."""
+        res = self.service.execute([GetRequest(k) for k in keys],
+                                   tenant=self.tenant)
+        found = np.array([r.status == Status.OK for r in res], bool)
+        vals = np.array([r.value if r.ok else 0 for r in res], np.int64)
+        return found, vals
 
     def dedup(self, keys: List[bytes]) -> np.ndarray:
         """Mask of keys NOT already present (the dedup filter)."""
@@ -90,7 +113,13 @@ class RecordStore:
 
     def insert(self, key: bytes, payload: int) -> bool:
         """Insert a NEW record; returns False (no write) if the key exists."""
-        found, _ = self.index.get_batch([key])
-        if bool(found[0]):
+        res = self.service.execute([GetRequest(key)], tenant=self.tenant)
+        if res[0].ok:
             return False
-        return self.index.put(key, payload).ok
+        return self.service.execute([PutRequest(key, payload)],
+                                    tenant=self.tenant)[0].ok
+
+    def close(self) -> None:
+        """Stop the service's threads — only if this store created it."""
+        if self._owns_service:
+            self.service.close()

@@ -214,8 +214,11 @@ class DistributedStringIndex(StringIndexBase):
     the same typed batched-op surface as the local
     :class:`repro.index.StringIndex`: ``get_batch`` / ``execute`` with
     per-op :class:`~repro.index.Status` codes.  Serving snapshots are
-    immutable (delta probes are skipped shard-side), so PUTs and SCANs
-    report ``Status.UNSUPPORTED`` — rebuild via :meth:`build` to ingest.
+    immutable (delta probes are skipped shard-side), so PUTs, DELETEs and
+    SCANs report ``Status.UNSUPPORTED`` — rebuild via :meth:`build` to
+    ingest.  Front it with :class:`repro.serve.service.IndexService`
+    (DESIGN.md §9) to serve it as an async multi-tenant request plane —
+    the service treats both implementations identically.
 
     Construction places every stacked pool over the mesh partition axis
     (``NamedSharding(mesh, P(axis))``), so callers no longer hand-roll the
@@ -332,4 +335,5 @@ class DistributedStringIndex(StringIndexBase):
                 self._map_get_results(gets, found, vals, self.sidx.width,
                                       results)
         return BatchResult(results=results, n_get=len(gets),
-                           n_put=0, n_scan=0, merged=False, delta_fill=0.0)
+                           n_put=0, n_scan=0, n_delete=0,
+                           merged=False, delta_fill=0.0)

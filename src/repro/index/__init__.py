@@ -7,9 +7,11 @@ in :mod:`repro.core` remain as the kernel-level seam underneath.
 """
 from .facade import (
     BatchResult,
+    DeleteRequest,
     GetRequest,
     IndexConfig,
     OpResult,
+    OVERLOADED_RESULT,
     PutRequest,
     Request,
     ScanRequest,
@@ -29,8 +31,8 @@ from .snapshot import (
 
 __all__ = [
     "StringIndex", "StringIndexBase", "IndexConfig",
-    "GetRequest", "PutRequest", "ScanRequest", "Request",
-    "OpResult", "BatchResult", "Status",
+    "GetRequest", "PutRequest", "ScanRequest", "DeleteRequest", "Request",
+    "OpResult", "BatchResult", "Status", "OVERLOADED_RESULT",
     "save_index", "load_index",
     "SnapshotError", "SnapshotFormatError", "SnapshotVersionError",
     "SNAPSHOT_MAGIC", "SNAPSHOT_VERSION",

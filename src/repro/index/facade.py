@@ -10,8 +10,10 @@ One object owns the full index lifecycle that was previously scattered over
 * :meth:`StringIndex.bulk_load` — paper Sec. 3.1 bulkload to a frozen
   device index.
 * Typed batched ops — :class:`GetRequest` / :class:`PutRequest` /
-  :class:`ScanRequest` in, :class:`BatchResult` out, with per-op
-  :class:`Status` codes (failures are data, not exceptions).
+  :class:`ScanRequest` / :class:`DeleteRequest` in, :class:`BatchResult`
+  out, with per-op :class:`Status` codes (failures are data, not
+  exceptions).  Deletes are delta-buffer tombstones reconciled at
+  ``merge_delta`` (DESIGN.md §9).
 * :meth:`StringIndex.execute` — plans a mixed batch into grouped fused
   dispatches: **one** ``insert_batch`` for all puts, **one**
   ``search_batch`` for all gets, one ``scan_batch`` per distinct window —
@@ -45,6 +47,7 @@ import numpy as np
 from repro.core import LITSBuilder, LITSConfig, StringSet
 from repro.core.tensor_index import (
     TensorIndex,
+    delete_batch,
     delta_fill_fraction,
     freeze,
     insert_batch,
@@ -108,6 +111,8 @@ class Status(enum.IntEnum):
     UNSUPPORTED = 4          # op not available on this implementation
     ROUTING_OVERFLOW = 5     # distributed: batch exceeded a shard's routing
     #                          capacity — results indeterminate, retry smaller
+    OVERLOADED = 6           # service admission control shed this op (queue
+    #                          full) — back off and retry (DESIGN.md §9)
 
 
 @dataclasses.dataclass(frozen=True, slots=True)
@@ -127,7 +132,12 @@ class ScanRequest:
     window: Optional[int] = None   # None -> IndexConfig.scan_window
 
 
-Request = Union[GetRequest, PutRequest, ScanRequest]
+@dataclasses.dataclass(frozen=True, slots=True)
+class DeleteRequest:
+    key: bytes
+
+
+Request = Union[GetRequest, PutRequest, ScanRequest, DeleteRequest]
 
 
 @dataclasses.dataclass(frozen=True, slots=True)
@@ -146,9 +156,11 @@ class OpResult:
 # batch, and a frozen dataclass is immutable, so sharing instances is safe
 _PUT_OK = OpResult(Status.OK)
 _PUT_UPDATED = OpResult(Status.OK, updated=True)
+_DELETED = OpResult(Status.OK)
 _NOT_FOUND = OpResult(Status.NOT_FOUND)
 _REJECTED_OVER_WIDTH = OpResult(Status.REJECTED_OVER_WIDTH)
 _REJECTED_FULL = OpResult(Status.REJECTED_FULL)
+OVERLOADED_RESULT = OpResult(Status.OVERLOADED)
 
 
 @dataclasses.dataclass
@@ -159,6 +171,7 @@ class BatchResult:
     n_get: int = 0
     n_put: int = 0
     n_scan: int = 0
+    n_delete: int = 0
     merged: bool = False              # auto-compaction ran during this batch
     delta_fill: float = 0.0           # fill fraction after the batch
 
@@ -230,10 +243,14 @@ class StringIndex(StringIndexBase):
         self._interpret = config.resolved_interpret()
         self.merge_count = 0
         self._host_pool = None         # lazy (key_bytes, ent_off, ent_len) copies
-        # fill fraction mirrored on host: every delta mutation goes through
-        # put_batch/merge on this object, so the mirror stays exact and
-        # read paths never pay a device sync for it
+        # fill fraction + latched overflow flag mirrored on host: every
+        # delta mutation goes through put_batch/delete_batch/merge on this
+        # object, so the mirrors stay exact and read paths never pay a
+        # device sync for them
         self._delta_fill = delta_fill_fraction(ti)
+        import jax
+
+        self._overflowed = bool(jax.device_get(ti.delta_overflow))
 
     # -- lifecycle ----------------------------------------------------------
 
@@ -288,6 +305,14 @@ class StringIndex(StringIndexBase):
     def delta_fill(self) -> float:
         return self._delta_fill
 
+    @property
+    def delta_overflowed(self) -> bool:
+        """A delta mutation was rejected for pool space (latched until the
+        next merge).  Distinct from ``delta_fill``: the byte pool or the
+        probe bound can reject while the entry count is still low, so
+        compaction policy must watch both."""
+        return self._overflowed
+
     def nbytes(self) -> int:
         return self.ti.nbytes()
 
@@ -329,8 +354,34 @@ class StringIndex(StringIndexBase):
         ins, upd, de_count, overflow = jax.device_get(
             (ins, upd, self.ti.de_count, self.ti.delta_overflow))
         self._delta_fill = float(de_count) / self.ti.de_off.shape[0]
+        self._overflowed = bool(overflow)
         merged = self._maybe_merge(bool(overflow))
         return ins, upd, merged
+
+    def delete_batch(self, keys: Sequence[bytes]) -> Tuple[np.ndarray, np.ndarray, bool]:
+        """Deletes: (deleted mask, rejected-full mask, auto-merge ran).
+
+        Deletes are delta-buffer tombstones (DESIGN.md §9): a key in the
+        delta gets its tombstone set in place; a key living only in the
+        frozen base claims a new shadowing tombstone entry, reconciled as a
+        physical ``builder.delete`` at the next ``merge_delta``.  Gets
+        observe the delete immediately; scans keep frozen-epoch semantics
+        (a tombstoned base key stays scannable until the merge).
+        """
+        if not len(keys):
+            return np.zeros(0, bool), np.zeros(0, bool), False
+        import jax
+
+        qb, ql = pad_queries(list(keys), self.ti.width)
+        self.ti, deleted, rejected = delete_batch(
+            self.ti, jnp.asarray(qb), jnp.asarray(ql))
+        # ONE host sync: op masks + the delta state the merge policy needs
+        deleted, rejected, de_count, overflow = jax.device_get(
+            (deleted, rejected, self.ti.de_count, self.ti.delta_overflow))
+        self._delta_fill = float(de_count) / self.ti.de_off.shape[0]
+        self._overflowed = bool(overflow)
+        merged = self._maybe_merge(bool(overflow))
+        return deleted, rejected, merged
 
     def scan_batch(self, starts: Sequence[bytes], window: int):
         """Range scans: (eids (B, window) int32, valid mask) over the frozen order."""
@@ -348,6 +399,9 @@ class StringIndex(StringIndexBase):
     def put(self, key: bytes, value: int) -> OpResult:
         return self.execute([PutRequest(key, value)]).results[0]
 
+    def delete(self, key: bytes) -> OpResult:
+        return self.execute([DeleteRequest(key)]).results[0]
+
     def scan(self, start: bytes,
              window: Optional[int] = None) -> List[Tuple[bytes, int]]:
         res = self.execute([ScanRequest(start, window)]).results[0]
@@ -356,23 +410,28 @@ class StringIndex(StringIndexBase):
     # -- the batched entry point -------------------------------------------
 
     def execute(self, batch: Sequence[Request]) -> BatchResult:
-        """Plan + run a mixed GET/PUT/SCAN batch as grouped fused dispatches.
+        """Plan + run a mixed GET/PUT/SCAN/DELETE batch as grouped fused dispatches.
 
-        Puts apply first (one ``insert_batch``), then gets (one
-        ``search_batch``) and scans (one ``scan_batch`` per distinct
-        window) observe the post-put index.  Per-op failures come back as
-        :class:`Status` codes; the only exceptions raised are for malformed
-        requests (unknown op types).
+        Puts apply first (one ``insert_batch``), then deletes (one
+        ``delete_batch`` — a delete beats a put of the same key within a
+        batch), then gets (one ``search_batch``) and scans (one
+        ``scan_batch`` per distinct window) observe the post-mutation
+        index.  Per-op failures come back as :class:`Status` codes; the
+        only exceptions raised are for malformed requests (unknown op
+        types).
         """
         results: List[Optional[OpResult]] = [None] * len(batch)
         gets: List[Tuple[int, GetRequest]] = []
         puts: List[Tuple[int, PutRequest]] = []
+        dels: List[Tuple[int, DeleteRequest]] = []
         scans: List[Tuple[int, ScanRequest]] = []
         for i, req in enumerate(batch):
             if isinstance(req, GetRequest):
                 gets.append((i, req))
             elif isinstance(req, PutRequest):
                 puts.append((i, req))
+            elif isinstance(req, DeleteRequest):
+                dels.append((i, req))
             elif isinstance(req, ScanRequest):
                 scans.append((i, req))
             else:
@@ -390,6 +449,21 @@ class StringIndex(StringIndexBase):
                     results[i] = _PUT_UPDATED if up else _PUT_OK
                 else:
                     results[i] = _REJECTED_FULL
+
+        if dels:
+            deleted, rejected, dmerged = self.delete_batch(
+                [r.key for _, r in dels])
+            merged = merged or dmerged
+            for (i, req), d, rej in zip(dels, deleted.tolist(),
+                                        rejected.tolist()):
+                if len(req.key) > width:
+                    results[i] = _REJECTED_OVER_WIDTH
+                elif d:
+                    results[i] = _DELETED
+                elif rej:
+                    results[i] = _REJECTED_FULL
+                else:
+                    results[i] = _NOT_FOUND
 
         if gets:
             found, vals = self.get_batch([r.key for _, r in gets])
@@ -423,7 +497,7 @@ class StringIndex(StringIndexBase):
         return BatchResult(
             results=results,  # type: ignore[arg-type]
             n_get=len(gets), n_put=len(puts), n_scan=len(scans),
-            merged=merged, delta_fill=self._delta_fill,
+            n_delete=len(dels), merged=merged, delta_fill=self._delta_fill,
         )
 
     # -- compaction ---------------------------------------------------------
@@ -435,7 +509,8 @@ class StringIndex(StringIndexBase):
         self.ti = merge_delta(self._ensure_builder(), self.ti)
         self.merge_count += 1
         self._host_pool = None
-        self._delta_fill = 0.0  # re-freeze starts an empty delta buffer
+        self._delta_fill = 0.0   # re-freeze starts an empty delta buffer
+        self._overflowed = False
 
     def _maybe_merge(self, overflow: bool) -> bool:
         thr = self.config.auto_merge_threshold

@@ -29,8 +29,10 @@ import numpy as np
 from repro.core.tensor_index import STATIC_FIELDS, TensorIndex
 
 SNAPSHOT_MAGIC = "lits-snapshot"
-SNAPSHOT_VERSION = 1
-SUPPORTED_VERSIONS: Tuple[int, ...] = (1,)
+# v2 adds the delta-buffer tombstone flags (``de_tomb``, DESIGN.md §9);
+# v1 files load with an all-live delta buffer (no deletes were possible)
+SNAPSHOT_VERSION = 2
+SUPPORTED_VERSIONS: Tuple[int, ...] = (1, 2)
 
 _META_KEY = "__snapshot_meta__"
 _META_FIELDS = STATIC_FIELDS
@@ -91,9 +93,14 @@ def load_index(path: str) -> TensorIndex:
             raise SnapshotVersionError(
                 f"{path}: snapshot format version {version!r}; this build "
                 f"supports {SUPPORTED_VERSIONS}")
-        missing = [n for n in _data_fields() if n not in z.files]
+        v1_synth = ("de_tomb",) if version < 2 else ()
+        missing = [n for n in _data_fields()
+                   if n not in z.files and n not in v1_synth]
         if missing:
             raise SnapshotFormatError(f"{path}: snapshot missing pools {missing}")
-        kw = {name: jnp.asarray(z[name]) for name in _data_fields()}
+        kw = {name: jnp.asarray(z[name]) for name in _data_fields()
+              if name in z.files}
+    if "de_tomb" not in kw:  # v1: tombstones didn't exist — all entries live
+        kw["de_tomb"] = jnp.zeros(kw["de_off"].shape[0], bool)
     kw.update({k: int(header["meta"][k]) for k in _META_FIELDS})
     return TensorIndex(**kw)

@@ -27,6 +27,12 @@ def main() -> None:
     ap.add_argument("--gen", type=int, default=8)
     ap.add_argument("--repeat-frac", type=float, default=0.5,
                     help="fraction of repeated prompts (prefix-cache hits)")
+    ap.add_argument("--max-len", type=int, default=512,
+                    help="KV window bound: prompt + generation + 1 must fit "
+                         "(validated per request, never silently clamped)")
+    ap.add_argument("--cache-capacity", type=int, default=1024,
+                    help="prefix-cache slots; past this, LRU eviction via "
+                         "the index DELETE path")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -37,7 +43,9 @@ def main() -> None:
     model = LMModel(cfg)
     params = model.init(jax.random.PRNGKey(0))
     runtime = IndexRuntimeConfig.from_env().validate()
-    eng = ServeEngine(model, params, index_backend=runtime.search_backend)
+    eng = ServeEngine(model, params, index_backend=runtime.search_backend,
+                      cache_capacity=args.cache_capacity,
+                      max_len=args.max_len)
     rng = np.random.default_rng(0)
     base = rng.integers(0, cfg.vocab, size=(args.batch, args.prompt_len)).astype(np.int32)
     t0 = time.time()
@@ -55,7 +63,14 @@ def main() -> None:
           f"in {wall:.2f}s")
     print(f"prefills={s.prefills} cached_prefills={s.cached_prefills} "
           f"decode_steps={s.decode_steps}")
-    print(f"prefix-cache hit_rate={pc.hit_rate:.2f} inserts={pc.inserts} merges={pc.merges}")
+    print(f"prefix-cache hit_rate={pc.hit_rate:.2f} inserts={pc.inserts} "
+          f"evictions={pc.evictions} merges={pc.merges}")
+    # the request plane under the cache (DESIGN.md §9)
+    sv = eng.prefix_cache.service.stats()
+    print(f"index-service flushes={sv.flushes} "
+          f"coalescing={sv.coalescing_factor:.1f} ops/dispatch "
+          f"p50={sv.p50_ms:.2f}ms p99={sv.p99_ms:.2f}ms "
+          f"shed={sv.shed} maintenance_merges={sv.merges}")
 
 
 if __name__ == "__main__":

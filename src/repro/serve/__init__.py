@@ -1,1 +1,13 @@
-"""Serving substrate: prefill/decode engine + LITS prompt-prefix cache."""
+"""Serving substrate: prefill/decode engine, LITS prompt-prefix cache, and
+the :class:`IndexService` async multi-tenant request plane (DESIGN.md §9)."""
+from .service import (
+    IndexService,
+    OpFuture,
+    ScanPage,
+    ServiceConfig,
+    ServiceStats,
+    TENANT_SEP,
+)
+
+__all__ = ["IndexService", "OpFuture", "ServiceConfig", "ServiceStats",
+           "ScanPage", "TENANT_SEP"]

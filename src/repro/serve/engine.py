@@ -26,31 +26,51 @@ class ServeEngine:
 
     def __init__(self, model: LMModel, params, cache_capacity: int = 1024,
                  index_backend: Optional[str] = None,
-                 index_config=None):
+                 index_config=None, max_len: int = 512,
+                 index_service=None):
         self.model = model
         self.params = params
         # index_config: a repro.index.IndexConfig for the prompt cache
         # (unified policy, DESIGN.md §8).  index_backend is the legacy
         # shorthand for just the traversal backend ("jnp" | "pallas" |
         # None -> REPRO_SEARCH_BACKEND); ignored when index_config is given.
+        # index_service: a repro.serve.service.IndexService to share one
+        # request plane across engines (DESIGN.md §9).
         self.prefix_cache = PrefixCache(capacity=cache_capacity,
                                         backend=index_backend,
-                                        config=index_config)
+                                        config=index_config,
+                                        service=index_service)
         self.prefill_fn = jax.jit(model.prefill, static_argnames=("max_len",))
         self.decode_fn = jax.jit(model.decode_step)
-        self.max_len = 512
+        # max_len bounds prompt + generation + 1 (the KV allocation); it is
+        # validated per request in generate() — never silently clamped
+        if max_len < 2:
+            raise ValueError(f"max_len must be >= 2, got {max_len}")
+        self.max_len = int(max_len)
         self.stats = ServeStats()
 
     @staticmethod
-    def _prompt_key(tokens: np.ndarray) -> bytes:
-        # tokenizer-independent exact key: 1-based bytes of the token ids
-        return b"p:" + tokens.astype(">u4").tobytes().replace(b"\x00", b"\x01")
+    def _prompt_key(tokens: np.ndarray, need: int) -> bytes:
+        # tokenizer-independent exact key: 1-based bytes of the token ids.
+        # ``need`` (the KV window the state was prefilled with) is part of
+        # the identity: a cached state can only serve requests with the
+        # same allocation — reusing a smaller-window state for a longer
+        # generation would decode past its KV buffers, and mixing windows
+        # in one all-hit batch would stack mismatched shapes.
+        return b"p:%d:" % need + \
+            tokens.astype(">u4").tobytes().replace(b"\x00", b"\x01")
 
     def generate(self, prompt_tokens: np.ndarray, n_steps: int) -> Dict[str, np.ndarray]:
         """prompt_tokens: (B, S) int32.  Returns generated ids (B, n_steps)."""
         t0 = time.time()
         B, S = prompt_tokens.shape
-        keys = [self._prompt_key(prompt_tokens[i]) for i in range(B)]
+        need = S + n_steps + 1
+        if need > self.max_len:
+            raise ValueError(
+                f"prompt ({S} tokens) + generation ({n_steps}) needs a KV "
+                f"window of {need} > max_len={self.max_len}; raise max_len "
+                f"on the engine or shorten the request")
+        keys = [self._prompt_key(prompt_tokens[i], need) for i in range(B)]
         hit, slots = self.prefix_cache.lookup(keys)
         if hit.all():
             # whole batch served from the prefix cache (skip prefill entirely)
@@ -63,7 +83,7 @@ class ServeEngine:
         else:
             cache, logits = self.prefill_fn(
                 self.params, {"tokens": jnp.asarray(prompt_tokens)},
-                max_len=min(self.max_len, S + n_steps + 1),
+                max_len=need,
             )
             self.stats.prefills += B
             misses = [i for i in range(B) if not hit[i]]

@@ -26,14 +26,39 @@ def test_prefix_cache_hit_miss_cycle():
     assert pc.stats.hit_rate > 0
 
 
-def test_prefix_cache_merge_under_pressure():
+def test_prefix_cache_capacity_eviction_under_pressure():
+    """`capacity` is enforced: admissions past it evict the least-recently-hit
+    slots through the index DELETE path (tombstones), instead of growing the
+    slot store unboundedly; compaction happens on the service's maintenance
+    thread (DESIGN.md §9)."""
     pc = PrefixCache(capacity=32)
     for wave in range(4):
         prompts = [b"w%d-%03d" % (wave, i) for i in range(16)]
         pc.admit(prompts, [{"cache": {}, "logits": jnp.zeros(2)}] * 16)
-    assert pc.stats.merges >= 1
+    assert len(pc.store) <= 32
+    assert pc.stats.evictions >= 32
     hit, _ = pc.lookup([b"w0-000", b"w3-015"])
-    assert hit.all()
+    assert not hit[0], "LRU victim must be evicted (store stayed bounded)"
+    assert hit[1], "recent admission must survive"
+    # evicted slots are gone from the store too — no leaked KV state
+    assert all(pc.get_state(s) is not None for s in pc._lru)
+    # deletes + puts ran through the delta buffer; compaction is the
+    # maintenance thread's job — force one step and the index stays coherent
+    pc.service.maintenance_step()
+    hit2, _ = pc.lookup([b"w3-015", b"w0-000"])
+    assert hit2[0] and not hit2[1]
+
+
+def test_prefix_cache_lru_recency_protects_hot_slots():
+    pc = PrefixCache(capacity=8)
+    a = [b"a-%02d" % i for i in range(8)]
+    pc.admit(a, [{"logits": jnp.zeros(2)}] * 8)
+    pc.lookup([a[0], a[1]])                    # refresh a0/a1 recency
+    pc.admit([b"b-%02d" % i for i in range(4)],
+             [{"logits": jnp.zeros(2)}] * 4)   # evicts 4 LRU: a2..a5
+    hit, _ = pc.lookup(a)
+    assert hit[0] and hit[1], "recently-hit slots must survive eviction"
+    assert not hit[2:6].any(), "least-recently-hit slots are the victims"
 
 
 def test_serve_engine_cache_reuse():
@@ -48,6 +73,89 @@ def test_serve_engine_cache_reuse():
     out2 = eng.generate(prompts, n_steps=4)
     assert eng.stats.cached_prefills == 2, "second pass must be served from LITS cache"
     assert np.array_equal(out1["generated"], out2["generated"])
+
+
+def test_prefix_cache_duplicate_admission_single_slot():
+    """Admitting the same prompt twice in one batch must yield ONE slot
+    (the index maps a key to one slot): a duplicate would strand a state
+    and a later eviction of the stale slot would delete the key out from
+    under the live one."""
+    pc = PrefixCache(capacity=8)
+    p = b"dup-prompt"
+    slots = pc.admit([p, p], [{"logits": jnp.zeros(2)},
+                              {"logits": jnp.ones(2)}])
+    assert slots[0] == slots[1] and len(pc.store) == 1
+    hit, got = pc.lookup([p])
+    assert hit[0] and got[0] == slots[0]
+    # the LAST state wins, matching the index's put-update order
+    assert float(pc.get_state(slots[0])["logits"][0]) == 1.0
+
+
+def test_prefix_cache_readmission_reclaims_stale_slot():
+    """Re-admitting an indexed prompt re-points the index at the new slot;
+    the stale slot must be reclaimed immediately — left in the LRU it would
+    later evict (DELETE) the key out from under the live slot."""
+    pc = PrefixCache(capacity=8)
+    s1 = pc.admit([b"p"], [{"v": 1}])[0]
+    s2 = pc.admit([b"p"], [{"v": 2}])[0]
+    assert s2 != s1 and len(pc.store) == 1
+    assert pc.get_state(s1) is None
+    hit, slots = pc.lookup([b"p"])
+    assert hit[0] and slots[0] == s2 and pc.get_state(s2)["v"] == 2
+
+
+def test_prefix_caches_sharing_one_service_are_isolated():
+    """Two caches on one request plane live in distinct tenant namespaces:
+    slot ids are cache-local, so a hit in one cache can never resolve
+    against the other's store."""
+    a = PrefixCache(capacity=8)
+    b = PrefixCache(capacity=8, service=a.service)
+    a.admit([b"shared-prompt"], [{"who": "a"}])
+    hit_b, _ = b.lookup([b"shared-prompt"])
+    assert not hit_b[0], "cache B must not see cache A's admission"
+    hit_a, slots_a = a.lookup([b"shared-prompt"])
+    assert hit_a[0] and a.get_state(slots_a[0])["who"] == "a"
+    b.close()          # B doesn't own the shared service: must not stop it
+    hit_a2, _ = a.lookup([b"shared-prompt"])
+    assert hit_a2[0]
+    a.close()
+
+
+def test_serve_engine_cached_state_window_is_part_of_identity():
+    """A cached KV state only serves requests with the SAME allocation:
+    re-asking with a longer generation must re-prefill (larger window), not
+    decode past the cached buffers."""
+    r = ARCHS["chatglm3-6b"].reduced()
+    m = LMModel(r)
+    params = m.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(m, params, max_len=64)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, r.vocab, size=(2, 8)).astype(np.int32)
+    eng.generate(prompts, n_steps=4)
+    assert eng.stats.prefills == 2
+    out = eng.generate(prompts, n_steps=12)   # larger window: NOT a hit
+    assert eng.stats.prefills == 4 and eng.stats.cached_prefills == 0
+    assert out["generated"].shape == (2, 12)
+    eng.generate(prompts, n_steps=12)         # same window: cache hit
+    assert eng.stats.cached_prefills == 2
+
+
+def test_serve_engine_max_len_validated_not_clamped():
+    """max_len is constructor policy and over-long requests are rejected
+    loudly — the silent min() clamp corrupted long generations."""
+    r = ARCHS["chatglm3-6b"].reduced()
+    m = LMModel(r)
+    params = m.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(m, params, max_len=16)
+    assert eng.max_len == 16
+    rng = np.random.default_rng(0)
+    ok_prompt = rng.integers(0, r.vocab, size=(1, 8)).astype(np.int32)
+    eng.generate(ok_prompt, n_steps=7)        # 8 + 7 + 1 == 16: fits
+    long_prompt = rng.integers(0, r.vocab, size=(1, 12)).astype(np.int32)
+    with pytest.raises(ValueError, match="max_len"):
+        eng.generate(long_prompt, n_steps=8)  # 12 + 8 + 1 > 16
+    with pytest.raises(ValueError):
+        ServeEngine(m, params, max_len=0)
 
 
 def test_record_store_dedup():

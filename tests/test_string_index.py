@@ -24,8 +24,8 @@ from repro.core import (
 )
 from repro.core.strings import random_strings
 from repro.index import (
-    GetRequest, IndexConfig, PutRequest, ScanRequest, SnapshotFormatError,
-    SnapshotVersionError, Status, StringIndex,
+    DeleteRequest, GetRequest, IndexConfig, PutRequest, ScanRequest,
+    SnapshotFormatError, SnapshotVersionError, Status, StringIndex,
 )
 
 
@@ -236,6 +236,100 @@ def test_scan_window_grouping_and_default(rng):
     assert [k for k, _ in res.results[0].entries] == keys[:4]
     assert [k for k, _ in res.results[1].entries] == keys[:8]
     assert [k for k, _ in res.results[2].entries] == keys[3:11]
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_delete_tombstone_semantics(rng, backend):
+    """DELETE completes the typed op family (DESIGN.md §9): delta-buffer
+    tombstones shadow the frozen base immediately for gets, reconcile
+    physically at merge_delta, and puts resurrect."""
+    keys, vals = _corpus(rng, 300)
+    cfg = IndexConfig(delta_capacity=256, auto_merge_threshold=None,
+                      search_backend=backend)
+    index = StringIndex.bulk_load(keys, vals, cfg)
+    res = index.execute([
+        DeleteRequest(keys[3]),          # base-resident -> tombstone shadow
+        DeleteRequest(b"never-existed"),  # absent -> NOT_FOUND
+        GetRequest(keys[3]),             # delete visible in the same batch
+        GetRequest(keys[4]),             # neighbour untouched
+        ScanRequest(keys[2], 4),         # frozen epoch: still scannable
+    ])
+    assert res.results[0].status == Status.OK
+    assert res.results[1].status == Status.NOT_FOUND
+    assert res.results[2].status == Status.NOT_FOUND
+    assert res.results[3].value == int(vals[4])
+    assert [k for k, _ in res.results[4].entries] == keys[2:6]
+    assert res.n_delete == 2
+    # double delete: the key is already unpublished
+    assert index.delete(keys[3]).status == Status.NOT_FOUND
+    # delta-resident key: tombstone set in place, no second slot
+    index.put(b"fresh", 11)
+    before = int(index.ti.de_count)
+    assert index.delete(b"fresh").status == Status.OK
+    assert int(index.ti.de_count) == before and index.get(b"fresh") is None
+    # resurrect: a put clears the tombstone and reports an insert
+    r = index.put(keys[3], 777)
+    assert r.ok and not r.updated
+    assert index.get(keys[3]) == 777
+    # over-width keys were never representable
+    wide = b"w" * (index.width + 1)
+    assert index.delete(wide).status == Status.REJECTED_OVER_WIDTH
+    # merge reconciles: builder.delete removes tombstoned keys physically
+    index.delete(keys[5])
+    index.merge()
+    assert index.get(keys[5]) is None and index.get(keys[3]) == 777
+    assert [k for k, _ in index.scan(keys[4], 3)] == \
+        [keys[4], keys[6], keys[7]], "post-merge scans skip the deleted key"
+
+
+def test_delete_full_pool_rejected_as_data(rng):
+    keys, vals = _corpus(rng, 150)
+    index = StringIndex.bulk_load(keys, vals, IndexConfig(
+        delta_capacity=8, auto_merge_threshold=None))
+    index.execute([PutRequest(b"f-%02d" % i, i) for i in range(8)])
+    res = index.execute([DeleteRequest(keys[0])])  # needs a slot: pool full
+    assert res.results[0].status == Status.REJECTED_FULL
+    assert index.get(keys[0]) == int(vals[0]), "rejected delete is a no-op"
+    index.merge()                                  # compaction frees slots
+    assert index.delete(keys[0]).status == Status.OK
+    assert index.get(keys[0]) is None
+
+
+def test_snapshot_carries_tombstones_and_reads_v1(rng, tmp_path):
+    import json
+
+    keys, vals = _corpus(rng, 150)
+    index = StringIndex.bulk_load(keys, vals, IndexConfig(
+        auto_merge_threshold=None))
+    index.execute([DeleteRequest(keys[9]), PutRequest(b"dl-1", 5)])
+    path = tmp_path / "v2.snap"
+    index.save(str(path))
+    restored = StringIndex.load(str(path))
+    assert restored.get(keys[9]) is None, "tombstone must survive the snapshot"
+    assert restored.get(b"dl-1") == 5 and restored.get(keys[10]) == int(vals[10])
+    # a v1 snapshot (pre-tombstone format) still loads: all delta entries
+    # live.  Synthesize one from a delete-free index — a real v1 file can
+    # only ever hold live entries.
+    live = StringIndex.bulk_load(keys, vals, IndexConfig(
+        auto_merge_threshold=None))
+    live.execute([PutRequest(b"dl-1", 5)])
+    path_live = tmp_path / "live.snap"
+    live.save(str(path_live))
+    z = dict(np.load(str(path_live), allow_pickle=False))
+    hdr = json.loads(bytes(z["__snapshot_meta__"]).decode())
+    hdr["version"] = 1
+    hdr["data_fields"] = [f for f in hdr["data_fields"] if f != "de_tomb"]
+    z.pop("de_tomb")
+    z["__snapshot_meta__"] = np.frombuffer(json.dumps(hdr).encode(), np.uint8)
+    v1 = tmp_path / "v1.snap"
+    with open(v1, "wb") as f:
+        np.savez_compressed(f, **z)
+    old = StringIndex.load(str(v1))
+    assert old.get(keys[9]) == int(vals[9]), \
+        "v1 had no deletes: every delta entry loads live"
+    assert old.get(b"dl-1") == 5
+    assert old.delete(b"dl-1").status == Status.OK, \
+        "a v1-loaded index speaks the full op family"
 
 
 def test_get_put_convenience_roundtrip(rng):
