@@ -1,0 +1,198 @@
+"""Compaction bench: epoch-based concurrent merge vs the stop-the-world baseline.
+
+Two measurements back the DESIGN.md §10 acceptance contract
+(``BENCH_compaction.json``):
+
+* **Merge latency vs index size** (delta-local workload): a fixed-size delta
+  is merged into bases of growing size.  The "legacy" column replays the
+  pre-§10 path — per-key Python ``builder.insert`` loop, full-pool
+  ``device_get``, and a refreeze that re-walks the whole structure (caches
+  invalidated) — exactly the old ``merge_delta``.  The "epoch" column is the
+  shipped vectorized+partial path.  Sublinear scaling shows as the epoch
+  merge-time ratio across sizes staying well under the size ratio.
+
+* **p99 op latency during a merge**: reader threads probe an
+  :class:`IndexService` while a forced compaction runs; ``compact()``
+  (off-lock epoch swap) vs ``compact(blocking=True)`` (the old behavior —
+  the whole merge under the index lock).  The acceptance bar is >= 5x p99
+  improvement.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core.tensor_index import freeze
+from repro.index import GetRequest, IndexConfig, PutRequest, StringIndex
+from repro.serve.service import IndexService, ServiceConfig
+
+from .common import dataset
+
+TENANT = "cb"
+
+
+# ---------------------------------------------------------------------------
+# the stop-the-world baseline (the pre-§10 merge_delta, kept here verbatim
+# so the "before" number survives in-tree after the code path is gone)
+# ---------------------------------------------------------------------------
+
+def _legacy_merge(index: StringIndex) -> None:
+    import jax
+
+    builder, ti = index._ensure_builder(), index.ti
+    cnt = int(jax.device_get(ti.de_count))
+    if cnt:
+        db = np.asarray(jax.device_get(ti.db_bytes))          # FULL pool
+        offs = np.asarray(jax.device_get(ti.de_off))[:cnt]
+        lens = np.asarray(jax.device_get(ti.de_len))[:cnt]
+        vlo = np.asarray(jax.device_get(ti.de_val_lo))[:cnt].view(np.uint32).astype(np.int64)
+        vhi = np.asarray(jax.device_get(ti.de_val_hi))[:cnt].astype(np.int64)
+        tomb = np.asarray(jax.device_get(ti.de_tomb))[:cnt]
+        for i in range(cnt):                                  # per-key loop
+            key = db[offs[i]: offs[i] + lens[i]].tobytes()
+            if tomb[i]:
+                builder.delete(key)
+                continue
+            val = int((vhi[i] << 32) | vlo[i])
+            if not builder.insert(key, val):
+                builder.update(key, val)
+    builder._sorted_cache = None                              # full re-walks
+    builder._hb = None
+    index.ti = freeze(builder, delta_capacity=ti.de_off.shape[0],
+                      delta_bytes=ti.db_bytes.shape[0],
+                      delta_probes=ti.delta_probes)
+    index._host_pool = None
+    index._delta_fill = 0.0
+    index._overflowed = False
+
+
+# ---------------------------------------------------------------------------
+# part A: merge latency vs index size, fixed (delta-local) write set
+# ---------------------------------------------------------------------------
+
+def _build(keys, d: int, width: int) -> StringIndex:
+    vals = np.arange(len(keys), dtype=np.int64)
+    idx = StringIndex.bulk_load(
+        keys, vals, IndexConfig(width=width, delta_capacity=max(2 * d, 256),
+                                auto_merge_threshold=None))
+    fresh = [b"cb-delta-%06d" % i for i in range(d)]
+    idx.put_batch(fresh, list(range(d)))
+    return idx
+
+def _merge_rows(all_keys: List[bytes], sizes: List[int], d: int,
+                width: int) -> list:
+    rows = []
+    for n in sizes:
+        keys = all_keys[:n]
+        idx = _build(keys, d, width)
+        t0 = time.perf_counter()
+        idx.merge()
+        epoch_ms = (time.perf_counter() - t0) * 1e3
+        idx2 = _build(keys, d, width)
+        t0 = time.perf_counter()
+        _legacy_merge(idx2)
+        legacy_ms = (time.perf_counter() - t0) * 1e3
+        rows.append({
+            "bench": "compaction", "section": "merge_scaling",
+            "n": len(keys), "delta_ops": d,
+            "epoch_merge_ms": round(epoch_ms, 2),
+            "legacy_merge_ms": round(legacy_ms, 2),
+            "speedup": round(legacy_ms / max(epoch_ms, 1e-9), 2),
+        })
+    lo, hi = rows[0], rows[-1]
+    rows.append({
+        "bench": "compaction", "section": "merge_scaling_summary",
+        "size_ratio": round(hi["n"] / lo["n"], 2),
+        # sublinear iff merge-time growth < index-size growth (delta fixed)
+        "epoch_time_ratio": round(hi["epoch_merge_ms"]
+                                  / max(lo["epoch_merge_ms"], 1e-9), 2),
+        "legacy_time_ratio": round(hi["legacy_merge_ms"]
+                                   / max(lo["legacy_merge_ms"], 1e-9), 2),
+        "epoch_sublinear": bool(hi["epoch_merge_ms"] / max(lo["epoch_merge_ms"], 1e-9)
+                                < hi["n"] / lo["n"]),
+    })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# part B: p99 op latency while a forced merge runs mid-traffic
+# ---------------------------------------------------------------------------
+
+def _p99_during_merge(keys, vals, d: int, blocking: bool) -> dict:
+    svc = IndexService.bulk_load(
+        {TENANT: (keys, vals)},
+        IndexConfig(delta_capacity=max(2 * d, 256), auto_merge_threshold=None),
+        ServiceConfig(max_batch=64, max_delay_ms=0.5, default_tenant=TENANT,
+                      merge_threshold=None))
+    try:
+        svc.execute([PutRequest(b"cb-delta-%06d" % i, i) for i in range(d)])
+        probe = [GetRequest(keys[i]) for i in range(0, len(keys), len(keys) // 16)]
+        svc.execute(probe)                       # warm the flush shapes
+        samples: List = []                       # (t_submit, latency_ms)
+        stop = threading.Event()
+
+        def prober():
+            while not stop.is_set():
+                t0 = time.perf_counter()
+                svc.execute(probe)
+                samples.append((t0, (time.perf_counter() - t0) * 1e3))
+
+        th = threading.Thread(target=prober)
+        th.start()
+        time.sleep(0.05)                         # traffic flowing first
+        m0 = time.perf_counter()
+        merged = svc.compact(blocking=blocking)
+        m1 = time.perf_counter()
+        time.sleep(0.05)
+        stop.set()
+        th.join()
+        s = svc.stats()
+        # ops in flight during the merge window (incl. one before it whose
+        # wait overlaps the window — the op a blocking merge stalls)
+        window = [dt for t0, dt in samples if t0 + dt / 1e3 >= m0 and t0 <= m1]
+        window = window or [dt for _, dt in samples]
+        return {
+            "bench": "compaction", "section": "service_p99",
+            "mode": "blocking" if blocking else "epoch",
+            "n": len(keys), "delta_ops": d, "merged": bool(merged),
+            "ops_in_window": len(window),
+            "p99_ms_during_merge": round(float(np.percentile(window, 99)), 3),
+            "max_ms_during_merge": round(float(np.max(window)), 3),
+            "merge_wall_ms": round(s.merge_wall_ms, 2),
+            "commit_pause_ms": round(s.merge_pause_ms, 3),
+            "redrained_ops": s.redrained_ops,
+            "epoch": s.epoch,
+        }
+    finally:
+        svc.close()
+
+
+def run(n: int = 20000, quick: bool = False) -> list:
+    d = 256 if quick else 1024
+    sizes = [1500, 4500] if quick else [4000, 12000, 36000]
+    all_keys = dataset("reddit", max(sizes[-1], n))
+    # ONE width for every size (and the warmup): per-width jit shapes would
+    # otherwise charge a fresh compile to whichever size sees them first
+    width = max(len(k) for k in all_keys) + 8
+    # warm both merge paths once (jit caches, HPT tables) so the smallest
+    # timed size isn't charged the one-time compile cost
+    warm = _build(all_keys[:512], d, width)
+    warm.merge()
+    _legacy_merge(_build(all_keys[:512], d, width))
+    rows = _merge_rows(all_keys, sizes, d, width)
+    svc_n = min(sizes[-1], len(all_keys))
+    keys = all_keys[:svc_n]
+    vals = np.arange(len(keys), dtype=np.int64)
+    blocking = _p99_during_merge(keys, vals, d, blocking=True)
+    epoch = _p99_during_merge(keys, vals, d, blocking=False)
+    improvement = blocking["p99_ms_during_merge"] \
+        / max(epoch["p99_ms_during_merge"], 1e-9)
+    rows += [blocking, epoch, {
+        "bench": "compaction", "section": "service_p99_summary",
+        "p99_improvement_x": round(improvement, 1),
+        "meets_5x_bar": bool(improvement >= 5.0),
+    }]
+    return rows

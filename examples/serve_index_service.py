@@ -104,7 +104,9 @@ def main() -> None:
         paged.extend(page.entries)
         if page.cursor is None or len(paged) >= 40:
             break
-        page = svc.scan_page(cursor=page.cursor)
+        # cursors are tenant-bound: the caller re-asserts its tenant and the
+        # service checks it against the token (forged cursors -> FORBIDDEN)
+        page = svc.scan_page(cursor=page.cursor, tenant="web")
     assert list(one) == paged[:40], "cursor pagination == one-shot scan"
 
     s = svc.stats()

@@ -155,6 +155,18 @@ class LITSBuilder:
         self.op_reads = 0
         self.op_writes = 0
         self._cdf_cache_dev = None
+        # incremental freeze substrate (DESIGN.md §10): the sorted entry order
+        # and the height bound are maintained across mutations so a merge
+        # refreeze never has to re-walk the whole structure.  ``None`` means
+        # "unknown — recompute exactly on next use" (and cache the result).
+        self._sorted_cache: Optional[np.ndarray] = None  # live eids, key order
+        self._hb: Optional[dict] = None                  # {"base","trie"} bound
+        # bulk-walk position memo (insert_many/delete_many): one batched
+        # ``_positions`` call per DISTINCT mnode visited instead of one
+        # jitted dispatch per key per level — per-row results are identical
+        # to the single-key path (the same per-row float32 math bulkload
+        # already batches), only the dispatch count changes
+        self._bulk_pos: Optional[dict] = None
 
     # ------------------------------------------------------------------
     # model values / positions (device-consistent for the HPT path)
@@ -211,6 +223,41 @@ class LITSBuilder:
             jnp.float32(alpha), jnp.float32(beta), jnp.int32(m),
         )
         return np.asarray(pos)[:n]
+
+    def _node_pos(self, nid: int, q: np.ndarray, qlen: int, pl: int,
+                  m: int) -> int:
+        """Model slot position of one key at mnode ``nid``.
+
+        Single-key callers pay one jitted ``_positions`` dispatch; inside a
+        bulk walk (``insert_many``/``delete_many``) the whole batch's
+        positions for this node are computed ONCE and memoized — per-row
+        math is identical, so the returned position is bit-identical to the
+        single-key path."""
+        bp = self._bulk_pos
+        if bp is not None:
+            tab = bp["memo"].get(nid)
+            if tab is None:
+                tab = self._positions(
+                    bp["bytes"], bp["lens"], pl,
+                    float(self.mn_alpha.data[nid]),
+                    float(self.mn_beta.data[nid]), m)
+                bp["memo"][nid] = tab
+            return int(tab[bp["row"]])
+        return int(self._positions(
+            q[None, :], np.array([qlen], np.int32), pl,
+            float(self.mn_alpha.data[nid]), float(self.mn_beta.data[nid]), m,
+        )[0])
+
+    def _bulk_matrix(self, keys: Sequence[bytes]):
+        """(N, width) zero-padded byte matrix + lengths for a bulk walk."""
+        W = self.width
+        qb = np.zeros((len(keys), W), np.uint8)
+        ql = np.zeros(len(keys), np.int32)
+        for i, k in enumerate(keys):
+            kb = np.frombuffer(k[:W], np.uint8)
+            qb[i, : kb.shape[0]] = kb
+            ql[i] = len(k)
+        return qb, ql
 
     # ------------------------------------------------------------------
     # entry helpers
@@ -283,6 +330,11 @@ class LITSBuilder:
         sys.setrecursionlimit(max(sys.getrecursionlimit(), 100000))
         self.root_item = self._build_group(eids, ss.bytes, ss.lens, force_mnode=True)
         self.n_keys = len(ss)
+        # entries were registered in sorted key order -> the ordered-traversal
+        # eid sequence is exactly ``eids``; heights are computed lazily (the
+        # first freeze walks once and caches)
+        self._sorted_cache = eids.copy()
+        self._hb = None
 
     # ------------------------------------------------------------------
     # recursive group build with PMSS decision
@@ -440,12 +492,7 @@ class LITSBuilder:
             elif kp > prefix:
                 item = int(self.items.data[base + m - 1])
             else:
-                pos = int(
-                    self._positions(
-                        q[None, :], np.array([qlen], np.int32), pl,
-                        float(self.mn_alpha.data[nid]), float(self.mn_beta.data[nid]), m,
-                    )[0]
-                )
+                pos = self._node_pos(nid, q, qlen, pl, m)
                 item = int(self.items.data[base + pos])
 
     def get(self, key: bytes) -> Optional[int]:
@@ -455,7 +502,15 @@ class LITSBuilder:
     # ------------------------------------------------------------------
     # insert / delete / update (paper Alg. 3)
     # ------------------------------------------------------------------
-    def insert(self, key: bytes, val: int) -> bool:
+    def _insert_walk(self, key: bytes, val: int):
+        """Structural insert without the Alg. 3 incCount/resize pass.
+
+        Returns ``(inserted, path, loc, eid)``: ``path`` is the mnode chain
+        walked (for the caller's deferred resize), ``loc`` the item slot whose
+        content changed (the sub-trie-local dirty root for incremental height
+        maintenance), and ``eid`` the new entry id — or, on a duplicate key,
+        the EXISTING entry id (so bulk callers can upsert without re-walking).
+        """
         if len(key) > self.width:
             raise ValueError("key longer than index width; rebuild with larger width")
         self.op_writes += 1
@@ -463,31 +518,28 @@ class LITSBuilder:
         path: List[Tuple[int, int]] = []  # (mnode id, item location of that mnode)
         loc = -1  # -1 = root_item, else index into items pool
         item = self.root_item
-        inserted = False
         while True:
             tag = item_tag(item)
             if tag == TAG_EMPTY:
                 eid = self._add_entry_bytes(q, qlen, val)
                 self._set_item(loc, make_item(TAG_ENTRY, eid))
-                inserted = True
-                break
+                return True, path, loc, eid
             if tag == TAG_ENTRY:
                 eid = item_payload(item)
                 if self.key_at(eid) == key:
-                    return False
+                    return False, path, loc, eid
                 neid = self._add_entry_bytes(q, qlen, val)
                 pair = np.array([eid, neid], np.int64)
                 bm, ls = self.entry_matrix(pair)
                 o = sort_order(StringSet(bm, ls))
                 self._set_item(loc, self._build_cnode(pair[o], bm[o], ls[o]))
-                inserted = True
-                break
+                return True, path, loc, neid
             if tag == TAG_CNODE:
-                inserted = self._cnode_insert(loc, item, key, q, qlen, val)
-                break
+                inserted, eid = self._cnode_insert(loc, item, key, q, qlen, val)
+                return inserted, path, loc, eid
             if tag == TAG_TRIE:
-                inserted = self._trie_insert(loc, item, key, q, qlen, val)
-                break
+                inserted, eid = self._trie_insert(loc, item, key, q, qlen, val)
+                return inserted, path, loc, eid
             nid = item_payload(item)
             path.append((nid, loc))
             pl = int(self.mn_prefix_len.data[nid])
@@ -501,17 +553,17 @@ class LITSBuilder:
             elif kp > prefix:
                 loc = base + m - 1
             else:
-                pos = int(
-                    self._positions(
-                        q[None, :], np.array([qlen], np.int32), pl,
-                        float(self.mn_alpha.data[nid]), float(self.mn_beta.data[nid]), m,
-                    )[0]
-                )
+                pos = self._node_pos(nid, q, qlen, pl, m)
                 loc = base + pos
             item = int(self.items.data[loc])
+
+    def insert(self, key: bytes, val: int) -> bool:
+        inserted, path, _loc, eid = self._insert_walk(key, val)
         if not inserted:
             return False
         self.n_keys += 1
+        self._note_inserted(key, eid)
+        self._hb = None  # structure changed: height bound recomputed on demand
         # incCount + resize (Alg. 3): rebuild topmost node violating the 2x rule
         for nid, nloc in path:
             self.mn_nkeys.data[nid] += 1
@@ -521,7 +573,7 @@ class LITSBuilder:
                 break
         return True
 
-    def _cnode_insert(self, loc: int, item: int, key: bytes, q, qlen, val) -> bool:
+    def _cnode_insert(self, loc: int, item: int, key: bytes, q, qlen, val):
         cid = item_payload(item)
         base, cnt = int(self.cn_base.data[cid]), int(self.cn_cnt.data[cid])
         eids = self.ch_ent.data[base : base + cnt].astype(np.int64)
@@ -530,7 +582,7 @@ class LITSBuilder:
 
         p = bisect.bisect_left(keys, key)
         if p < cnt and keys[p] == key:
-            return False
+            return False, int(eids[p])
         neid = self._add_entry_bytes(q, qlen, val)
         new_eids = np.insert(eids, p, neid)
         bm, ls = self.entry_matrix(new_eids)
@@ -540,14 +592,14 @@ class LITSBuilder:
         else:
             # full: PMSS decides model-based node vs subtrie (paper Sec. 3.4 scenario 2)
             self._set_item(loc, self._build_group(new_eids, bm, ls))
-        return True
+        return True, neid
 
-    def _trie_insert(self, loc: int, item: int, key: bytes, q, qlen, val) -> bool:
+    def _trie_insert(self, loc: int, item: int, key: bytes, q, qlen, val):
         leaf = self._trie_descend(item, q, qlen)
         leid = item_payload(leaf)
         lkey = self.key_at(leid)
         if lkey == key:
-            return False
+            return False, leid
         lq = np.zeros(self.width, np.uint8)
         lb = np.frombuffer(lkey, np.uint8)
         lq[: lb.shape[0]] = lb
@@ -576,7 +628,7 @@ class LITSBuilder:
         self.tr_left.append(left)
         self.tr_right.append(right)
         self._set_item(cur_loc, make_item(TAG_TRIE, tid))
-        return True
+        return True, neid
 
     def _set_item(self, loc, item: int) -> None:
         if loc == -1:
@@ -594,41 +646,46 @@ class LITSBuilder:
         eids = np.array(list(self.iter_subtree(item)), np.int64)
         self._set_item(loc, self._build_group(eids))
 
-    def delete(self, key: bytes) -> bool:
+    def _delete_walk(self, key: bytes):
+        """Structural delete without the shrink-resize pass.
+
+        Returns ``(removed, path, loc, eid)`` — ``eid`` is the entry id that
+        was unlinked (the entry pool keeps the dead bytes; only the structure
+        forgets them), ``loc`` the dirty item slot, as in :meth:`_insert_walk`.
+        """
         self.op_writes += 1
         q, qlen = self._pad_query(key)
         path: List[Tuple[int, int]] = []
         loc = -1
         item = self.root_item
-        removed = False
         while True:
             tag = item_tag(item)
             if tag == TAG_EMPTY:
-                return False
+                return False, path, loc, -1
             if tag == TAG_ENTRY:
-                if self.key_at(item_payload(item)) != key:
-                    return False
+                eid = item_payload(item)
+                if self.key_at(eid) != key:
+                    return False, path, loc, -1
                 self._set_item(loc, make_item(TAG_EMPTY))
-                removed = True
-                break
+                return True, path, loc, eid
             if tag == TAG_CNODE:
                 cid = item_payload(item)
                 base, cnt = int(self.cn_base.data[cid]), int(self.cn_cnt.data[cid])
                 eids = self.ch_ent.data[base : base + cnt].astype(np.int64)
                 keep = [int(e) for e in eids if self.key_at(int(e)) != key]
                 if len(keep) == cnt:
-                    return False
+                    return False, path, loc, -1
+                gone = next(int(e) for e in eids if self.key_at(int(e)) == key)
                 if len(keep) == 1:
                     self._set_item(loc, make_item(TAG_ENTRY, keep[0]))
                 else:
                     arr = np.array(keep, np.int64)
                     bm, ls = self.entry_matrix(arr)
                     self._set_item(loc, self._build_cnode(arr, bm, ls))
-                removed = True
-                break
+                return True, path, loc, gone
             if tag == TAG_TRIE:
-                removed = self._trie_delete(loc, item, key, q, qlen)
-                break
+                removed, eid = self._trie_delete(loc, item, key, q, qlen)
+                return removed, path, loc, eid
             nid = item_payload(item)
             path.append((nid, loc))
             pl = int(self.mn_prefix_len.data[nid])
@@ -642,17 +699,17 @@ class LITSBuilder:
             elif kp > prefix:
                 loc = base + m - 1
             else:
-                pos = int(
-                    self._positions(
-                        q[None, :], np.array([qlen], np.int32), pl,
-                        float(self.mn_alpha.data[nid]), float(self.mn_beta.data[nid]), m,
-                    )[0]
-                )
+                pos = self._node_pos(nid, q, qlen, pl, m)
                 loc = base + pos
             item = int(self.items.data[loc])
+
+    def delete(self, key: bytes) -> bool:
+        removed, path, _loc, eid = self._delete_walk(key)
         if not removed:
             return False
         self.n_keys -= 1
+        self._note_removed(eid)
+        self._hb = None  # structure changed: height bound recomputed on demand
         for nid, _ in path:
             self.mn_nkeys.data[nid] -= 1
         for nid, nloc in path:
@@ -666,7 +723,7 @@ class LITSBuilder:
                 break
         return True
 
-    def _trie_delete(self, loc, item: int, key: bytes, q, qlen) -> bool:
+    def _trie_delete(self, loc, item: int, key: bytes, q, qlen):
         # walk, remembering parent side, then splice the sibling up.
         parent = None  # (tid, side)
         cur = item
@@ -678,7 +735,8 @@ class LITSBuilder:
             parent = (tid, side)
             cur = int(self.tr_right.data[tid]) if side else int(self.tr_left.data[tid])
         if item_tag(cur) != TAG_ENTRY or self.key_at(item_payload(cur)) != key:
-            return False
+            return False, -1
+        gone = item_payload(cur)
         tid, side = parent  # parent is not None: a trie item always has >= 2 leaves
         sibling = int(self.tr_left.data[tid]) if side else int(self.tr_right.data[tid])
         # find grandparent link to tid
@@ -687,7 +745,7 @@ class LITSBuilder:
             gtid = item_payload(gcur)
             if gtid == tid:
                 self._set_item(gp_loc, sibling)
-                return True
+                return True, gone
             cb, cm = int(self.tr_byte.data[gtid]), int(self.tr_mask.data[gtid])
             c = int(q[cb]) if cb < min(qlen, self.width) else 0
             if c & cm:
@@ -702,6 +760,186 @@ class LITSBuilder:
             return False
         self.ent_val.data[eid] = val
         return True
+
+    # ------------------------------------------------------------------
+    # bulk replay ops (merge_delta's vectorized path, DESIGN.md §10)
+    # ------------------------------------------------------------------
+    def _item_at(self, loc) -> int:
+        if loc == -1:
+            return int(self.root_item)
+        if isinstance(loc, tuple):
+            kind, tid = loc
+            return int(self.tr_left.data[tid] if kind == "trie_l"
+                       else self.tr_right.data[tid])
+        return int(self.items.data[loc])
+
+    def _rank_in(self, sorted_arr: np.ndarray, key: bytes) -> int:
+        """First index i with key_at(sorted_arr[i]) >= key (binary search —
+        O(log n) key compares against the incremental sorted order)."""
+        lo, hi = 0, sorted_arr.shape[0]
+        while lo < hi:
+            mid = (lo + hi) // 2
+            if self.key_at(int(sorted_arr[mid])) < key:
+                lo = mid + 1
+            else:
+                hi = mid
+        return lo
+
+    def _note_inserted(self, key: bytes, eid: int) -> None:
+        # single-op path: invalidate rather than splice — an O(n) np.insert
+        # per key would tax legacy per-key workloads; the bulk ops maintain
+        # the cache with ONE batched splice instead
+        self._sorted_cache = None
+
+    def _note_removed(self, eid: int) -> None:
+        self._sorted_cache = None
+
+    def insert_many(self, keys: Sequence[bytes], vals: np.ndarray) -> np.ndarray:
+        """Bulk upsert: insert each new key, overwrite the value of existing
+        ones.  Returns the per-key inserted mask (False = value update).
+
+        This is the merge-replay path (Alg. 3 amortized): structural edits
+        run per key, but the incCount/resize pass is DEFERRED to one sweep at
+        the end — a hot sub-trie touched by many replayed keys rebuilds once,
+        not once per key — and the sorted order / height bound are updated
+        with one batched splice + dirty-subtree-local walks, so the following
+        ``freeze`` never re-walks the whole index.
+        """
+        n0 = len(keys)
+        inserted = np.zeros(n0, bool)
+        if n0 == 0:
+            return inserted
+        sorted_arr = self.sorted_eids()
+        hb = dict(self.height_bound())
+        # invalidate until the batch COMPLETES: a mid-batch exception leaves
+        # the structure partially replayed, and a stale cache would let the
+        # next freeze publish an order missing those keys — None forces an
+        # exact re-walk instead.  Restored (maintained) on success below.
+        self._sorted_cache = None
+        self._hb = None
+        # process in key order so the batched np.insert below keeps ties
+        # (equal insertion ranks) in sorted order
+        order = sorted(range(n0), key=lambda i: keys[i])
+        paths: List[List[Tuple[int, int]]] = []
+        dirty: dict = {}        # dirty item slot -> mnode depth of that slot
+        ranks: List[int] = []
+        new_eids: List[int] = []
+        qb, ql = self._bulk_matrix(keys)
+        self._bulk_pos = {"bytes": qb, "lens": ql, "row": 0, "memo": {}}
+        try:
+            for i in order:
+                key = keys[i]
+                self._bulk_pos["row"] = i
+                ok, path, loc, eid = self._insert_walk(key, int(vals[i]))
+                if not ok:
+                    self.ent_val.data[eid] = int(vals[i])  # upsert: refresh
+                    continue
+                inserted[i] = True
+                self.n_keys += 1
+                new_eids.append(eid)
+                ranks.append(self._rank_in(sorted_arr, key))
+                for nid, _ in path:
+                    self.mn_nkeys.data[nid] += 1
+                paths.append(path)
+                dirty[loc] = len(path)
+        finally:
+            self._bulk_pos = None
+        # deferred Alg. 3 resize: topmost violating node per touched path.
+        # The guard skips nodes an earlier rebuild already restructured
+        # (their slot no longer holds the recorded mnode item).
+        for path in paths:
+            for depth, (nid, nloc) in enumerate(path):
+                if self.mn_nkeys.data[nid] >= \
+                        self.cfg.resize_grow * self.mn_slot_cnt.data[nid]:
+                    if self._item_at(nloc) == make_item(TAG_MNODE, nid):
+                        self._rebuild_at(nloc, make_item(TAG_MNODE, nid))
+                        dirty[nloc] = depth
+                    break
+        if new_eids:
+            sorted_arr = np.insert(sorted_arr, np.asarray(ranks, np.int64),
+                                   np.asarray(new_eids, np.int64))
+        self._sorted_cache = sorted_arr
+        self._update_height_bound(hb, dirty)
+        return inserted
+
+    def delete_many(self, keys: Sequence[bytes]) -> np.ndarray:
+        """Bulk delete with the same deferred-resize/batched-splice scheme as
+        :meth:`insert_many`.  Returns the per-key removed mask."""
+        n0 = len(keys)
+        removed_mask = np.zeros(n0, bool)
+        if n0 == 0:
+            return removed_mask
+        sorted_arr = self.sorted_eids()
+        hb = dict(self.height_bound())
+        self._sorted_cache = None   # see insert_many: restored on success
+        self._hb = None
+        paths: List[List[Tuple[int, int]]] = []
+        dirty: dict = {}
+        gone: List[int] = []
+        qb, ql = self._bulk_matrix(keys)
+        self._bulk_pos = {"bytes": qb, "lens": ql, "row": 0, "memo": {}}
+        try:
+            for i in range(n0):
+                self._bulk_pos["row"] = i
+                ok, path, loc, eid = self._delete_walk(keys[i])
+                if not ok:
+                    continue
+                removed_mask[i] = True
+                self.n_keys -= 1
+                gone.append(eid)
+                for nid, _ in path:
+                    self.mn_nkeys.data[nid] -= 1
+                paths.append(path)
+                dirty[loc] = len(path)
+        finally:
+            self._bulk_pos = None
+        for path in paths:
+            for depth, (nid, nloc) in enumerate(path):
+                m = int(self.mn_slot_cnt.data[nid])
+                if (m > self.cfg.min_slots
+                        and self.mn_nkeys.data[nid] < self.cfg.resize_shrink * m
+                        and self.mn_nkeys.data[nid] >= 0):
+                    if self._item_at(nloc) == make_item(TAG_MNODE, nid):
+                        self._rebuild_at(nloc, make_item(TAG_MNODE, nid))
+                        dirty[nloc] = depth
+                    break
+        if gone:
+            sorted_arr = sorted_arr[
+                ~np.isin(sorted_arr, np.asarray(gone, np.int64))]
+        self._sorted_cache = sorted_arr
+        self._update_height_bound(hb, dirty)
+        return removed_mask
+
+    def _update_height_bound(self, hb: dict, dirty: dict) -> None:
+        """Fold dirty-subtree heights into the cached bound.  Unchanged
+        regions are covered by the previous bound; deletes can only shrink a
+        region, so the max stays a valid (possibly loose) upper bound —
+        ``max_iters`` derived from it only bounds traversal loops."""
+        for loc, depth in dirty.items():
+            b, t = self._subtree_heights(self._item_at(loc), depth)
+            hb["base"] = max(hb["base"], b)
+            hb["trie"] = max(hb["trie"], t)
+        self._hb = hb
+
+    # ------------------------------------------------------------------
+    # incremental freeze substrate: sorted order + height bound caches
+    # ------------------------------------------------------------------
+    def sorted_eids(self) -> np.ndarray:
+        """Live entry ids in key order (== ``iter_subtree(root)``), cached
+        and maintained incrementally across mutations."""
+        if self._sorted_cache is None:
+            self._sorted_cache = np.fromiter(
+                self.iter_subtree(self.root_item), dtype=np.int64, count=-1)
+        return self._sorted_cache
+
+    def height_bound(self) -> dict:
+        """Upper bound on ``heights()`` (exact after bulkload / full walk;
+        maintained per-dirty-subtree by the bulk ops).  ``freeze`` derives
+        the traversal iteration bound from this, so merges never pay a
+        whole-index walk."""
+        if self._hb is None:
+            self._hb = self.heights()
+        return self._hb
 
     # ------------------------------------------------------------------
     # ordered traversal (scan substrate) + stats
@@ -742,8 +980,14 @@ class LITSBuilder:
 
     def heights(self) -> dict:
         """Paper Table 3: (base height, trie height) by depth-first walk."""
+        base_h, trie_h = self._subtree_heights(self.root_item, 0)
+        return {"base": base_h, "trie": trie_h}
+
+    def _subtree_heights(self, item: int, base_depth: int) -> Tuple[int, int]:
+        """(base, trie) height of the subtree under ``item``, with mnode/cnode
+        levels counted from ``base_depth`` (the slot's depth in the index)."""
         base_h = trie_h = 0
-        stack = [(self.root_item, 0, 0)]
+        stack = [(item, base_depth, 0)]
         while stack:
             item, bd, td = stack.pop()
             tag = item_tag(item)
@@ -768,7 +1012,7 @@ class LITSBuilder:
                 it = int(self.items.data[base + p])
                 if it:
                     stack.append((it, bd + 1, td))
-        return {"base": base_h, "trie": trie_h}
+        return base_h, trie_h
 
     def space_bytes(self) -> dict:
         pools = {

@@ -91,6 +91,7 @@ STATIC_FIELDS = ("width", "max_iters", "cnode_cap", "rank_iters",
         "ent_sorted", "cdf_tab", "prob_tab", "root_item",
         "db_bytes", "db_used", "de_off", "de_len", "de_val_lo", "de_val_hi",
         "de_hash", "de_tomb", "de_count", "dh_slot", "delta_overflow",
+        "epoch",
     ],
     meta_fields=list(STATIC_FIELDS),
 )
@@ -133,6 +134,11 @@ class TensorIndex:
     de_count: jax.Array
     dh_slot: jax.Array
     delta_overflow: jax.Array
+    # compaction epoch: increments at every merge_delta (snapshot format v3).
+    # A data field (device scalar), NOT static metadata — a static field
+    # would bake the epoch into every jit cache key and recompile the whole
+    # op surface once per compaction.
+    epoch: jax.Array
     # static metadata
     width: int
     max_iters: int
@@ -170,12 +176,17 @@ def freeze(
     delta_capacity: int = 4096,
     delta_bytes: int | None = None,
     delta_probes: int = 16,
+    epoch: int = 0,
 ) -> TensorIndex:
-    heights = b.heights()
+    # both the height bound and the sorted entry order come from the
+    # builder's incremental caches (exact after bulkload; maintained
+    # per-dirty-subtree by insert_many/delete_many) — a merge refreeze
+    # therefore costs O(touched sub-tries + memcpy), not an O(n) Python walk
+    heights = b.height_bound()
     max_iters = int(heights["base"] + heights["trie"] + 4)
     n = max(b.ent_off.n, 1)
     rank_iters = int(math.ceil(math.log2(n))) + 2
-    ent_sorted = np.fromiter(b.iter_subtree(b.root_item), dtype=np.int32, count=-1)
+    ent_sorted = np.asarray(b.sorted_eids(), dtype=np.int32)
     if ent_sorted.size == 0:
         ent_sorted = np.zeros(1, np.int32)
     key_pool = np.concatenate([b.key_bytes.view(), np.zeros(b.width + 1, np.uint8)])
@@ -218,6 +229,7 @@ def freeze(
         de_count=jnp.asarray(np.int32(0)),
         dh_slot=jnp.full(hcap, -1, jnp.int32),
         delta_overflow=jnp.asarray(False),
+        epoch=jnp.asarray(np.int32(epoch)),
         width=int(b.width),
         max_iters=max_iters,
         cnode_cap=int(b.cfg.cnode_cap),
@@ -452,7 +464,9 @@ def _scan_batch_jit(ti: TensorIndex, qbytes: jax.Array, qlens: jax.Array,
     r = rank_batch_impl(ti, qbytes, qlens, backend, interpret)
     n = ti.ent_sorted.shape[0]
     idx = r[:, None] + jnp.arange(window, dtype=jnp.int32)[None, :]
-    valid = idx < n
+    # an EMPTY root means zero live entries: ent_sorted then holds only the
+    # freeze pad sentinel (pools cannot be zero-sized), which must not scan
+    valid = (idx < n) & (ti.root_item != 0)
     eids = jnp.take(ti.ent_sorted, jnp.minimum(idx, n - 1))
     return jnp.where(valid, eids, -1), valid
 
@@ -640,31 +654,72 @@ def delete_batch(ti: TensorIndex, kbytes: jax.Array, klens: jax.Array):
 
 
 def delta_fill_fraction(ti: TensorIndex) -> float:
+    """Delta entry fill fraction — **forces a blocking device sync**.
+
+    Hot paths (service stats polling, compaction policy) must use the
+    host-side mirror instead (``StringIndex.delta_fill``, maintained by
+    every mutating facade op); this function remains the legacy seam for
+    code holding a bare :class:`TensorIndex`.
+    """
     return float(jax.device_get(ti.de_count)) / ti.de_off.shape[0]
 
 
-def merge_delta(builder: LITSBuilder, ti: TensorIndex) -> TensorIndex:
-    """Minor compaction: replay delta inserts into the host builder, re-freeze.
+def merge_delta(builder: LITSBuilder, ti: TensorIndex, *,
+                sync_base_values: bool = False) -> TensorIndex:
+    """Minor compaction: bulk-replay the delta into the host builder, re-freeze.
 
-    Tombstoned entries (see :func:`delete_batch`) replay as
-    ``builder.delete`` — the point where a shadowed base key is physically
-    removed and stops being scannable."""
-    cnt = int(jax.device_get(ti.de_count))
+    The replay is vectorized end to end (DESIGN.md §10):
+
+    * ONE bundled scalar sync (``de_count``/``db_used``/``epoch``), then one
+      ``device_get`` of the **live delta region only** — device-side slices,
+      never the full pools;
+    * tombstones replay as one ``builder.delete_many``, live entries as one
+      upserting ``builder.insert_many`` — both defer the Alg. 3
+      incCount/resize pass so a hot sub-trie rebuilds once per merge
+      (``_rebuild_at`` stays sub-trie-local), and both maintain the
+      builder's incremental sorted-order/height caches;
+    * the refreeze is therefore *partial*: :func:`freeze` reuses those
+      caches, so merge cost scales with the touched sub-tries (plus pool
+      memcpys), not with index size.
+
+    ``sync_base_values=True`` copies the device-resident base values
+    (``ent_val_lo/hi`` — updated in place by :func:`insert_batch` for
+    base-hit puts) back into the builder first.  Callers whose builder is in
+    eid-lockstep with ``ti`` (every freeze-lineage builder) MUST pass it or
+    in-place base updates silently revert at the merge; a builder freshly
+    reconstructed from the live pools already carries current values.
+
+    The returned index starts an empty delta buffer and carries
+    ``epoch = ti.epoch + 1``.
+    """
+    cnt, used, epoch = (int(x) for x in jax.device_get(
+        (ti.de_count, ti.db_used, ti.epoch)))
+    if sync_base_values:
+        # clamp to the overlap: after an aborted partial replay the builder
+        # may hold MORE entries than ``ti`` exported — those never existed
+        # on device, so their host values are already current
+        n = min(builder.ent_val.n, ti.ent_val_lo.shape[0])
+        if n:
+            lo, hi = jax.device_get((ti.ent_val_lo[:n], ti.ent_val_hi[:n]))
+            lo64 = np.asarray(lo, np.int32).view(np.uint32).astype(np.int64)
+            hi64 = np.asarray(hi, np.int32).astype(np.int64)
+            builder.ent_val.data[:n] = (hi64 << 32) | lo64
     if cnt:
-        db = np.asarray(jax.device_get(ti.db_bytes))
-        offs = np.asarray(jax.device_get(ti.de_off))[:cnt]
-        lens = np.asarray(jax.device_get(ti.de_len))[:cnt]
-        vlo = np.asarray(jax.device_get(ti.de_val_lo))[:cnt].view(np.uint32).astype(np.int64)
-        vhi = np.asarray(jax.device_get(ti.de_val_hi))[:cnt].astype(np.int64)
-        tomb = np.asarray(jax.device_get(ti.de_tomb))[:cnt]
-        for i in range(cnt):
-            key = db[offs[i] : offs[i] + lens[i]].tobytes()
-            if tomb[i]:
-                builder.delete(key)
-                continue
-            val = int((vhi[i] << 32) | vlo[i])
-            if not builder.insert(key, val):
-                builder.update(key, val)
+        db, offs, lens, vlo, vhi, tomb = (np.asarray(x) for x in jax.device_get((
+            ti.db_bytes[: max(used, 1)], ti.de_off[:cnt], ti.de_len[:cnt],
+            ti.de_val_lo[:cnt], ti.de_val_hi[:cnt], ti.de_tomb[:cnt])))
+        keys = [db[offs[i]: offs[i] + lens[i]].tobytes() for i in range(cnt)]
+        vals = (vhi.astype(np.int64) << 32) \
+            | vlo.view(np.uint32).astype(np.int64)
+        tl = tomb.tolist()
+        dead = [k for k, t in zip(keys, tl) if t]
+        if dead:
+            builder.delete_many(dead)
+        live = ~tomb
+        if live.any():
+            builder.insert_many([k for k, t in zip(keys, tl) if not t],
+                                vals[live])
     new_ti = freeze(builder, delta_capacity=ti.de_off.shape[0],
-                    delta_bytes=ti.db_bytes.shape[0], delta_probes=ti.delta_probes)
+                    delta_bytes=ti.db_bytes.shape[0],
+                    delta_probes=ti.delta_probes, epoch=epoch + 1)
     return new_ti

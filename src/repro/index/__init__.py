@@ -7,6 +7,7 @@ in :mod:`repro.core` remain as the kernel-level seam underneath.
 """
 from .facade import (
     BatchResult,
+    MergeTicket,
     DeleteRequest,
     GetRequest,
     IndexConfig,
@@ -32,7 +33,7 @@ from .snapshot import (
 __all__ = [
     "StringIndex", "StringIndexBase", "IndexConfig",
     "GetRequest", "PutRequest", "ScanRequest", "DeleteRequest", "Request",
-    "OpResult", "BatchResult", "Status", "OVERLOADED_RESULT",
+    "OpResult", "BatchResult", "Status", "OVERLOADED_RESULT", "MergeTicket",
     "save_index", "load_index",
     "SnapshotError", "SnapshotFormatError", "SnapshotVersionError",
     "SNAPSHOT_MAGIC", "SNAPSHOT_VERSION",

@@ -48,7 +48,6 @@ from repro.core import LITSBuilder, LITSConfig, StringSet
 from repro.core.tensor_index import (
     TensorIndex,
     delete_batch,
-    delta_fill_fraction,
     freeze,
     insert_batch,
     lookup_values,
@@ -113,6 +112,8 @@ class Status(enum.IntEnum):
     #                          capacity — results indeterminate, retry smaller
     OVERLOADED = 6           # service admission control shed this op (queue
     #                          full) — back off and retry (DESIGN.md §9)
+    FORBIDDEN = 7            # tenant-isolation violation (e.g. a scan cursor
+    #                          forged for another tenant's namespace)
 
 
 @dataclasses.dataclass(frozen=True, slots=True)
@@ -163,6 +164,21 @@ _REJECTED_FULL = OpResult(Status.REJECTED_FULL)
 OVERLOADED_RESULT = OpResult(Status.OVERLOADED)
 
 
+@dataclasses.dataclass(frozen=True)
+class MergeTicket:
+    """One open merge epoch (``begin_merge`` → ``run_merge`` →
+    ``commit_merge``/``abort_merge``, DESIGN.md §10).
+
+    ``ti`` is the immutable pytree snapshot the off-lock replay reads;
+    mutations applied to the live index meanwhile are journaled on the
+    facade and re-drained at commit."""
+
+    ti: TensorIndex
+    epoch: int
+    builder_fresh: bool   # builder was reconstructed for this merge (values
+    #                       already current — no device val-sync needed)
+
+
 @dataclasses.dataclass
 class BatchResult:
     """``execute`` output: per-op results in request order + batch effects."""
@@ -183,10 +199,51 @@ class BatchResult:
 # 64-bit value packing (device pools store values as lo/hi int32 pairs)
 # ---------------------------------------------------------------------------
 
-def _split_values(vals: np.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def _coalesce_journal(journal: list) -> list:
+    """Concatenate CONSECUTIVE same-kind journal batches (arrival order
+    preserved) so the commit re-drain pays one device dispatch + one host
+    sync per run of puts/deletes instead of one per flushed batch — the
+    commit pause is the only pause the request path can observe."""
+    out: list = []
+    for kind, qb, ql, lo, hi in journal:
+        if out and out[-1][0] == kind:
+            k, pqb, pql, plo, phi = out[-1]
+            out[-1] = (k, np.concatenate([pqb, qb]), np.concatenate([pql, ql]),
+                       None if lo is None else np.concatenate([plo, lo]),
+                       None if hi is None else np.concatenate([phi, hi]))
+        else:
+            out.append((kind, qb, ql, lo, hi))
+    return out
+
+
+def _pad_batch_pow2(qb, ql, lo, hi):
+    """Pad a re-drain batch to the next power-of-two row count so commit
+    replays hit a small set of bucketed jit shapes.  Pad rows use the
+    over-width length sentinel (``width + 1``, see ``pad_queries``): no
+    stored key can have it, so ``_mutate_batch`` resolves them as pure
+    no-ops (no match, no new slot, no overflow latch)."""
+    real = qb.shape[0]
+    cap = 1 << max(real - 1, 0).bit_length()
+    if cap == real:
+        return qb, ql, lo, hi
+    pad = cap - real
+    qb = np.concatenate([qb, np.zeros((pad, qb.shape[1]), qb.dtype)])
+    ql = np.concatenate([ql, np.full(pad, qb.shape[1] + 1, ql.dtype)])
+    if lo is not None:
+        lo = np.concatenate([lo, np.zeros(pad, lo.dtype)])
+        hi = np.concatenate([hi, np.zeros(pad, hi.dtype)])
+    return qb, ql, lo, hi
+
+
+def _split_np(vals: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
     v = np.asarray(vals, np.int64)
     lo = (v & 0xFFFFFFFF).astype(np.uint32).view(np.int32)
     hi = (v >> 32).astype(np.int32)
+    return lo, hi
+
+
+def _split_values(vals: np.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    lo, hi = _split_np(vals)
     return jnp.asarray(lo), jnp.asarray(hi)
 
 
@@ -243,14 +300,23 @@ class StringIndex(StringIndexBase):
         self._interpret = config.resolved_interpret()
         self.merge_count = 0
         self._host_pool = None         # lazy (key_bytes, ent_off, ent_len) copies
-        # fill fraction + latched overflow flag mirrored on host: every
-        # delta mutation goes through put_batch/delete_batch/merge on this
-        # object, so the mirrors stay exact and read paths never pay a
-        # device sync for them
-        self._delta_fill = delta_fill_fraction(ti)
+        # None = no merge in flight; a list = the epoch-merge journal: every
+        # mutation applied between begin_merge() and commit_merge() is
+        # recorded here and re-drained onto the merged index at commit
+        # (DESIGN.md §10 — the re-drain invariant)
+        self._merge_journal: Optional[list] = None
+        # fill fraction, latched overflow flag and compaction epoch mirrored
+        # on host: every delta mutation goes through put_batch/delete_batch/
+        # merge on this object, so the mirrors stay exact and read paths
+        # (stats polling included) never pay a device sync for them — ONE
+        # bundled sync here at construction
         import jax
 
-        self._overflowed = bool(jax.device_get(ti.delta_overflow))
+        de_count, overflow, epoch = jax.device_get(
+            (ti.de_count, ti.delta_overflow, ti.epoch))
+        self._delta_fill = float(de_count) / ti.de_off.shape[0]
+        self._overflowed = bool(overflow)
+        self._epoch = int(epoch)
 
     # -- lifecycle ----------------------------------------------------------
 
@@ -306,6 +372,11 @@ class StringIndex(StringIndexBase):
         return self._delta_fill
 
     @property
+    def epoch(self) -> int:
+        """Compaction epoch (host mirror of ``ti.epoch``; bumps per merge)."""
+        return self._epoch
+
+    @property
     def delta_overflowed(self) -> bool:
         """A delta mutation was rejected for pool space (latched until the
         next merge).  Distinct from ``delta_fill``: the byte pool or the
@@ -347,14 +418,23 @@ class StringIndex(StringIndexBase):
         import jax
 
         qb, ql = pad_queries(list(keys), self.ti.width)
-        lo, hi = _split_values(np.asarray(values, np.int64))
+        lo_np, hi_np = _split_np(np.asarray(values, np.int64))
         self.ti, ins, upd = insert_batch(
-            self.ti, jnp.asarray(qb), jnp.asarray(ql), lo, hi)
+            self.ti, jnp.asarray(qb), jnp.asarray(ql),
+            jnp.asarray(lo_np), jnp.asarray(hi_np))
         # ONE host sync: op masks + the delta state the merge policy needs
         ins, upd, de_count, overflow = jax.device_get(
             (ins, upd, self.ti.de_count, self.ti.delta_overflow))
         self._delta_fill = float(de_count) / self.ti.de_off.shape[0]
         self._overflowed = bool(overflow)
+        if self._merge_journal is not None:
+            # epoch merge in flight: journal the ACCEPTED ops (rejected /
+            # over-width ops already reported failure — re-draining them
+            # would resurrect work the caller was told did not happen)
+            acc = ins | upd
+            if acc.any():
+                self._merge_journal.append(
+                    ("put", qb[acc], ql[acc], lo_np[acc], hi_np[acc]))
         merged = self._maybe_merge(bool(overflow))
         return ins, upd, merged
 
@@ -380,6 +460,11 @@ class StringIndex(StringIndexBase):
             (deleted, rejected, self.ti.de_count, self.ti.delta_overflow))
         self._delta_fill = float(de_count) / self.ti.de_off.shape[0]
         self._overflowed = bool(overflow)
+        if self._merge_journal is not None and deleted.any():
+            # journal only EFFECTIVE deletes (absent keys are no-ops on the
+            # merged index too; rejected tombstones were reported as data)
+            self._merge_journal.append(
+                ("delete", qb[deleted], ql[deleted], None, None))
         merged = self._maybe_merge(bool(overflow))
         return deleted, rejected, merged
 
@@ -500,43 +585,155 @@ class StringIndex(StringIndexBase):
             n_delete=len(dels), merged=merged, delta_fill=self._delta_fill,
         )
 
-    # -- compaction ---------------------------------------------------------
+    # -- compaction (epoch-based, DESIGN.md §10) ----------------------------
 
     def merge(self) -> None:
-        """Minor compaction: replay the delta buffer into the host builder,
-        re-freeze.  Runs automatically from ``execute``/``put_batch`` when
-        the fill fraction crosses ``config.auto_merge_threshold``."""
-        self.ti = merge_delta(self._ensure_builder(), self.ti)
+        """Minor compaction, synchronous: replay the delta buffer into the
+        host builder, re-freeze, swap.  Runs automatically from
+        ``execute``/``put_batch`` when the fill fraction crosses
+        ``config.auto_merge_threshold``.  Composed from the epoch seams
+        below — concurrent callers (the service's maintenance thread) use
+        them directly to keep the expensive middle step off the index lock.
+        """
+        ticket = self.begin_merge()
+        try:
+            new_ti = self.run_merge(ticket)
+        except BaseException:
+            self.abort_merge(ticket)
+            raise
+        self.commit_merge(ticket, new_ti)
+
+    def begin_merge(self) -> MergeTicket:
+        """Open a merge epoch: snapshot the current index and start the
+        mutation journal.  Cheap (no device work) — callers hold their
+        serialization lock only for this and for :meth:`commit_merge`;
+        :meth:`run_merge` runs lock-free while mutations keep landing on
+        the live index (journaled for the commit re-drain).  One merge may
+        be open at a time."""
+        if self._merge_journal is not None:
+            raise RuntimeError("a merge epoch is already open")
+        self._merge_journal = []
+        return MergeTicket(ti=self.ti, epoch=self._epoch,
+                           builder_fresh=self._builder is None)
+
+    def run_merge(self, ticket: MergeTicket) -> TensorIndex:
+        """The expensive middle step, safe OUTSIDE the caller's index lock:
+        bulk-replay the ticket's delta snapshot into the host builder and
+        re-freeze.  Touches only the ticket's (immutable) pytree and the
+        builder — never the live ``self.ti``."""
+        builder = self._ensure_builder(ticket.ti)
+        # a freeze-lineage builder is in eid-lockstep with the snapshot, so
+        # device-side in-place base value updates must be copied back; a
+        # builder reconstructed just now already read the live values
+        return merge_delta(builder, ticket.ti,
+                           sync_base_values=not ticket.builder_fresh)
+
+    def commit_merge(self, ticket: MergeTicket, new_ti: TensorIndex) -> int:
+        """Swap the merged base in and re-drain the journal: every mutation
+        accepted between begin and commit replays onto ``new_ti`` in arrival
+        order, so the swap is invisible to readers and writers (the §10
+        re-drain invariant).  Returns the number of re-drained ops — the
+        measure of the commit pause, bounded by write traffic during the
+        merge, not by index size."""
+        import jax
+
+        journal, self._merge_journal = self._merge_journal or [], None
+        redrained = 0
+        for kind, qb, ql, lo, hi in _coalesce_journal(journal):
+            real = qb.shape[0]
+            redrained += real
+            # pad to a power-of-two bucket: coalesced batches would otherwise
+            # be novel (B, W) shapes whose first dispatch pays an XLA compile
+            # UNDER the commit lock — the very pause this protocol bounds.
+            # Pad rows carry the over-width length sentinel (width + 1),
+            # which _mutate_batch rejects without mutating anything.
+            qb, ql, lo, hi = _pad_batch_pow2(qb, ql, lo, hi)
+            for attempt in (0, 1):
+                if kind == "put":
+                    new_ti, ins, upd = insert_batch(
+                        new_ti, jnp.asarray(qb), jnp.asarray(ql),
+                        jnp.asarray(lo), jnp.asarray(hi))
+                    clean = bool(jax.device_get(jnp.all((ins | upd)[:real])))
+                else:
+                    new_ti, _, rej = delete_batch(
+                        new_ti, jnp.asarray(qb), jnp.asarray(ql))
+                    clean = not bool(jax.device_get(jnp.any(rej[:real])))
+                if clean:
+                    break
+                if attempt:
+                    # a retry against an EMPTY delta still rejected: the
+                    # journal batch itself exceeds the pool.  These ops were
+                    # acknowledged — dropping them silently is not an option,
+                    # so fail the commit loudly (the live index still holds
+                    # every write; only the merged base is discarded)
+                    raise RuntimeError(
+                        "re-drain rejected acknowledged ops even after a "
+                        "fold-down merge; delta pool too small for the "
+                        "journal batch")
+                # the fresh delta pool filled mid-re-drain (journal bigger
+                # than capacity): fold it down and replay this batch again
+                new_ti = merge_delta(self._ensure_builder(), new_ti,
+                                     sync_base_values=True)
+        self.ti = new_ti
         self.merge_count += 1
         self._host_pool = None
-        self._delta_fill = 0.0   # re-freeze starts an empty delta buffer
-        self._overflowed = False
+        de_count, overflow, epoch = jax.device_get(
+            (new_ti.de_count, new_ti.delta_overflow, new_ti.epoch))
+        self._delta_fill = float(de_count) / new_ti.de_off.shape[0]
+        self._overflowed = bool(overflow)
+        self._epoch = int(epoch)
+        return redrained
+
+    def abort_merge(self, ticket: MergeTicket) -> None:
+        """Close a merge epoch without swapping: the live index (which kept
+        absorbing writes) stays current; the journal is discarded."""
+        self._merge_journal = None
 
     def _maybe_merge(self, overflow: bool) -> bool:
         thr = self.config.auto_merge_threshold
-        if thr is None:
-            # policy disabled: the delta epoch is pinned — on overflow,
-            # further puts come back Status.REJECTED_FULL until the caller
-            # invokes merge() explicitly
+        if thr is None or self._merge_journal is not None:
+            # policy disabled (delta epoch pinned — on overflow, further
+            # puts come back Status.REJECTED_FULL until the caller invokes
+            # merge() explicitly), or a merge epoch is already open (this
+            # mutation was just journaled; the commit re-drain covers it)
             return False
         if overflow or self._delta_fill >= thr:
             self.merge()
             return True
         return False
 
-    def _ensure_builder(self) -> LITSBuilder:
-        """The host builder; reconstructed from the live base pools after
-        ``load`` (a snapshot carries no host state).  The rebuilt builder
-        retrains its HPT, so post-merge entry ids may differ from the
-        pre-snapshot lineage — key->value results are unaffected."""
+    def _ensure_builder(self, ti: Optional[TensorIndex] = None) -> LITSBuilder:
+        """The host builder; reconstructed from ``ti``'s (default: the live)
+        base pools after ``load`` (a snapshot carries no host state).  Only
+        the LIVE entries (``ent_sorted``) are replayed — the pools may carry
+        dead bytes from pre-snapshot deletes, and resurrecting those would
+        undo them.  The rebuilt builder retrains its HPT, so post-merge
+        entry ids may differ from the pre-snapshot lineage — key->value
+        results are unaffected."""
         if self._builder is None:
+            import jax
+
+            ti = self.ti if ti is None else ti
             pool, ent_off, ent_len = self._host_entries()
-            vals = _join_values(self.ti.ent_val_lo, self.ti.ent_val_hi)
-            n = self.ti.n_entries
+            eids, lo, hi, root = jax.device_get(
+                (ti.ent_sorted, ti.ent_val_lo, ti.ent_val_hi, ti.root_item))
+            if int(root) == 0:  # TAG_EMPTY root: no live entries at all —
+                # freeze pads ent_sorted with a [0] SENTINEL then, and pool
+                # slot 0 may hold a dead (deleted) key that must NOT come back
+                from repro.core.hpt import uniform_hpt
+
+                b = LITSBuilder(config=self.config.builder,
+                                hpt=uniform_hpt())
+                b.width = ti.width
+                b._sorted_cache = np.zeros(0, np.int64)
+                self._builder = b
+                return b
+            eids = np.asarray(eids, np.int64)
+            vals = _join_values(lo, hi)
             keys = [pool[ent_off[i]: ent_off[i] + ent_len[i]].tobytes()
-                    for i in range(n)]
+                    for i in eids]
             b = LITSBuilder(config=self.config.builder)
-            b.bulkload(StringSet.from_list(keys), vals[:n], width=self.ti.width)
+            b.bulkload(StringSet.from_list(keys), vals[eids], width=ti.width)
             self._builder = b
         return self._builder
 

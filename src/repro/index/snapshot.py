@@ -30,9 +30,11 @@ from repro.core.tensor_index import STATIC_FIELDS, TensorIndex
 
 SNAPSHOT_MAGIC = "lits-snapshot"
 # v2 adds the delta-buffer tombstone flags (``de_tomb``, DESIGN.md §9);
-# v1 files load with an all-live delta buffer (no deletes were possible)
-SNAPSHOT_VERSION = 2
-SUPPORTED_VERSIONS: Tuple[int, ...] = (1, 2)
+# v1 files load with an all-live delta buffer (no deletes were possible).
+# v3 adds the compaction ``epoch`` counter (DESIGN.md §10); v1/v2 files
+# load at epoch 0 (the lineage restarts counting from the snapshot).
+SNAPSHOT_VERSION = 3
+SUPPORTED_VERSIONS: Tuple[int, ...] = (1, 2, 3)
 
 _META_KEY = "__snapshot_meta__"
 _META_FIELDS = STATIC_FIELDS
@@ -93,14 +95,17 @@ def load_index(path: str) -> TensorIndex:
             raise SnapshotVersionError(
                 f"{path}: snapshot format version {version!r}; this build "
                 f"supports {SUPPORTED_VERSIONS}")
-        v1_synth = ("de_tomb",) if version < 2 else ()
+        synth = (("de_tomb",) if version < 2 else ()) + \
+            (("epoch",) if version < 3 else ())
         missing = [n for n in _data_fields()
-                   if n not in z.files and n not in v1_synth]
+                   if n not in z.files and n not in synth]
         if missing:
             raise SnapshotFormatError(f"{path}: snapshot missing pools {missing}")
         kw = {name: jnp.asarray(z[name]) for name in _data_fields()
               if name in z.files}
     if "de_tomb" not in kw:  # v1: tombstones didn't exist — all entries live
         kw["de_tomb"] = jnp.zeros(kw["de_off"].shape[0], bool)
+    if "epoch" not in kw:    # v1/v2: epochs didn't exist — lineage restarts
+        kw["epoch"] = jnp.asarray(np.int32(0))
     kw.update({k: int(header["meta"][k]) for k in _META_FIELDS})
     return TensorIndex(**kw)

@@ -27,8 +27,13 @@ engine was built for:
   ops, submissions resolve immediately to ``Status.OVERLOADED`` (data, not
   an exception — the facade's failure contract extends to overload).
 * **Background maintenance** — the service disables the facade's in-band
-  auto-merge and runs ``merge_delta`` compaction from a maintenance thread
-  instead, keeping multi-second host re-freezes out of the request path.
+  auto-merge and runs compaction from a maintenance thread instead, using
+  the facade's epoch seams (``begin_merge``/``run_merge``/``commit_merge``,
+  DESIGN.md §10): the expensive replay+refreeze happens OFF the index lock
+  while flushes keep landing on the old epoch; the commit swap re-drains
+  the journaled mid-merge writes, so the only request-path pause is bounded
+  by write traffic, not index size.  Maintenance failures are counted and
+  surfaced (``maintenance_errors``), each distinct error logged once.
 * :meth:`stats` — a :class:`ServiceStats` snapshot: queue depth, flush
   sizes, coalescing factor, shed count, p50/p99 op latency.
 
@@ -43,6 +48,7 @@ from __future__ import annotations
 import base64
 import dataclasses
 import json
+import logging
 import re
 import threading
 import time
@@ -65,6 +71,8 @@ from repro.index import (
     StringIndex,
     StringIndexBase,
 )
+
+_LOG = logging.getLogger(__name__)
 
 # tenant ids are printable identifiers; the separator byte (0x1f, ASCII unit
 # separator) can therefore never appear inside a tenant prefix, which is what
@@ -104,6 +112,16 @@ class ServiceStats:
     delta_fill: float = 0.0        # backing index delta fill right now
     p50_ms: float = 0.0            # median submit->resolve latency
     p99_ms: float = 0.0
+    # epoch-based compaction metrics (DESIGN.md §10)
+    epoch: int = 0                 # backing index compaction epoch
+    merge_pause_ms: float = 0.0    # last commit pause (index lock held)
+    merge_pause_ms_max: float = 0.0
+    merge_wall_ms: float = 0.0     # last full merge wall time (mostly off-lock)
+    redrained_ops: int = 0         # total ops re-drained at commit swaps
+    # maintenance-loop health: a persistently failing compaction is surfaced,
+    # never silently retried forever
+    maintenance_errors: int = 0
+    last_maintenance_error: Optional[str] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -205,9 +223,13 @@ class IndexService:
         self._queued_ops = 0                    # ops (not groups) pending
         self._flush_asap = False
         self._closed = False
-        # one lock serializes every touch of the backing index (flushes,
-        # maintenance merges, stats reads of delta_fill)
+        # one lock serializes every touch of the backing index (flushes, the
+        # begin/commit edges of epoch merges, stats reads of delta_fill).
+        # The expensive middle of a merge runs OUTSIDE it (DESIGN.md §10).
         self._index_lock = threading.Lock()
+        # serializes whole merges against each other (maintenance thread vs
+        # an explicit compact() caller) without blocking the request path
+        self._merge_mutex = threading.Lock()
         self._maint_wake = threading.Event()
         self._latencies: deque[float] = deque(maxlen=self.config.latency_window)
         self._submitted = 0
@@ -216,6 +238,13 @@ class IndexService:
         self._flushes = 0
         self._max_flush = 0
         self._merges = 0
+        self._merge_pause_ms = 0.0
+        self._merge_pause_ms_max = 0.0
+        self._merge_wall_ms = 0.0
+        self._redrained = 0
+        self._maintenance_errors = 0
+        self._last_maintenance_error: Optional[str] = None
+        self._logged_errors: set = set()
         self._flusher = threading.Thread(
             target=self._flush_loop, name="lits-service-flusher", daemon=True)
         self._maintenance = threading.Thread(
@@ -382,15 +411,25 @@ class IndexService:
         """One page of a tenant-scoped range scan, with a resumption token.
 
         The first call names ``start``; subsequent calls pass the returned
-        ``cursor`` (an opaque string carrying tenant + position — ``start``
-        and ``tenant`` args are ignored when it is given).  ``cursor is
-        None`` in the result means the tenant's key range is exhausted.
-        Page concatenation reproduces exactly the one-shot scan (tested in
-        tests/test_index_service.py).
+        ``cursor`` (an opaque string carrying position + page size; ``start``
+        is ignored when it is given).  ``cursor is None`` in the result means
+        the tenant's key range is exhausted.  Page concatenation reproduces
+        exactly the one-shot scan (tested in tests/test_index_service.py).
+
+        Cursors are tenant-bound: the token embeds the tenant it was issued
+        for, and a cursor presented by a different caller (the ``tenant``
+        argument, defaulting to ``default_tenant``) is REFUSED with
+        ``Status.FORBIDDEN`` as data — a forged or replayed token can never
+        scan another tenant's namespace (§9 errors-as-data contract).
         """
         page = page_size or self.config.scan_page_size
         if cursor is not None:
-            tenant, start, page = _decode_cursor(cursor)
+            ctenant, start, page = _decode_cursor(cursor)
+            caller = tenant if tenant is not None else self.config.default_tenant
+            if ctenant != caller:
+                return ScanPage(entries=(), cursor=None,
+                                status=Status.FORBIDDEN)
+            tenant = ctenant
         fut = self.submit(ScanRequest(start, page), tenant)
         self.flush()
         res = fut.result(timeout=120.0)
@@ -421,20 +460,60 @@ class IndexService:
             return False
         return self.compact()
 
-    def compact(self) -> bool:
+    def compact(self, blocking: bool = False) -> bool:
         """Force one compaction now, regardless of ``merge_threshold`` —
         the escape hatch for callers whose next op NEEDS delta space (e.g.
         an eviction path that just saw ``REJECTED_FULL``).  Returns whether
-        a merge actually ran (False on read-only backends / empty delta)."""
-        merge = getattr(self.index, "merge", None)
-        if merge is None:
-            return False
-        with self._index_lock:
-            if getattr(self.index, "delta_fill", 0.0) <= 0.0:
+        a merge actually ran (False on read-only backends / empty delta).
+
+        On backends with the epoch seams (``begin_merge``/``run_merge``/
+        ``commit_merge``) the expensive replay+refreeze runs OFF the index
+        lock: requests keep flushing against the old epoch, their mutations
+        are journaled, and the commit swap re-drains the journal — the only
+        request-path pause is that commit (bounded by concurrent write
+        traffic, not index size).  ``blocking=True`` forces the legacy
+        stop-the-world path (the merge holds the index lock end to end) —
+        kept for backends without the seams and as the benchmark baseline
+        (``benchmarks/compaction_bench.py``).
+        """
+        begin = getattr(self.index, "begin_merge", None)
+        if begin is None or blocking:
+            merge = getattr(self.index, "merge", None)
+            if merge is None:
                 return False
-            merge()
+            with self._merge_mutex:
+                t0 = time.monotonic()
+                with self._index_lock:
+                    if getattr(self.index, "delta_fill", 0.0) <= 0.0:
+                        return False
+                    merge()
+                    pause_ms = wall_ms = (time.monotonic() - t0) * 1e3
+                redrained = 0
+        else:
+            with self._merge_mutex:
+                t0 = time.monotonic()
+                with self._index_lock:
+                    if getattr(self.index, "delta_fill", 0.0) <= 0.0:
+                        return False
+                    ticket = self.index.begin_merge()
+                try:
+                    new_ti = self.index.run_merge(ticket)   # OFF-lock: requests flow
+                except BaseException:
+                    with self._index_lock:
+                        self.index.abort_merge(ticket)
+                    raise
+                tp = time.monotonic()
+                with self._index_lock:
+                    redrained = self.index.commit_merge(ticket, new_ti)
+                t1 = time.monotonic()
+                pause_ms = (t1 - tp) * 1e3
+                wall_ms = (t1 - t0) * 1e3
         with self._cv:
             self._merges += 1
+            self._merge_pause_ms = pause_ms
+            self._merge_pause_ms_max = max(self._merge_pause_ms_max, pause_ms)
+            self._merge_wall_ms = wall_ms
+            self._redrained += redrained
         return True
 
     # -- metrics ------------------------------------------------------------
@@ -452,7 +531,17 @@ class IndexService:
                 coalescing_factor=(self._completed / self._flushes
                                    if self._flushes else 0.0),
                 merges=self._merges,
+                # host mirrors only — stats polling must NEVER sync the
+                # device (delta_fill_fraction would; the facade mirror is
+                # maintained by every mutating op)
                 delta_fill=float(getattr(self.index, "delta_fill", 0.0)),
+                epoch=int(getattr(self.index, "epoch", 0)),
+                merge_pause_ms=self._merge_pause_ms,
+                merge_pause_ms_max=self._merge_pause_ms_max,
+                merge_wall_ms=self._merge_wall_ms,
+                redrained_ops=self._redrained,
+                maintenance_errors=self._maintenance_errors,
+                last_maintenance_error=self._last_maintenance_error,
             )
         if lat.size:
             s.p50_ms = float(np.percentile(lat, 50))
@@ -464,6 +553,11 @@ class IndexService:
         with self._cv:
             self._submitted = self._completed = self._shed = 0
             self._flushes = self._max_flush = self._merges = 0
+            self._merge_pause_ms = self._merge_pause_ms_max = 0.0
+            self._merge_wall_ms = 0.0
+            self._redrained = 0
+            self._maintenance_errors = 0
+            self._last_maintenance_error = None
             self._latencies.clear()
 
     @property
@@ -596,10 +690,28 @@ class IndexService:
                 return
             try:
                 self.maintenance_step()
-            except Exception:
-                # maintenance must never kill the service; the next request
-                # that needs space will surface REJECTED_FULL as data
-                pass
+            except Exception as e:
+                # maintenance must never kill the service (the next request
+                # that needs space surfaces REJECTED_FULL as data) — but a
+                # persistently failing compaction must never be invisible
+                # either: count it, surface the last error through stats(),
+                # and log each DISTINCT error once (not once per retry)
+                err = f"{type(e).__name__}: {e}"
+                # dedup key is truncated so messages embedding varying state
+                # (fill counts etc.) still collapse; the set is bounded so a
+                # pathological error stream cannot grow it forever
+                key = err[:160]
+                with self._cv:
+                    self._maintenance_errors += 1
+                    self._last_maintenance_error = err
+                    first = key not in self._logged_errors \
+                        and len(self._logged_errors) < 64
+                    if first:
+                        self._logged_errors.add(key)
+                if first:
+                    _LOG.exception("IndexService maintenance step failed "
+                                   "(suppressing repeats of this error): %s",
+                                   err)
 
 
 @lru_cache(maxsize=4096)

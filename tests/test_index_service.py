@@ -190,7 +190,9 @@ def test_cursor_pagination_equals_one_shot_scan(rng):
         pages.extend(page.entries)
         if page.cursor is None or len(pages) >= 60:
             break
-        page = svc.scan_page(cursor=page.cursor)  # token carries the state
+        # token carries the position; the caller re-asserts its tenant and
+        # the service verifies it against the token (forged-cursor defense)
+        page = svc.scan_page(cursor=page.cursor, tenant="t")
         hops += 1
     assert pages[:60] == list(one), "pages must concatenate to the one-shot"
     assert hops >= 8
@@ -201,6 +203,103 @@ def test_cursor_pagination_equals_one_shot_scan(rng):
     # garbled tokens are malformed requests
     with pytest.raises(ValueError):
         svc.scan_page(cursor="not-a-cursor")
+    svc.close()
+
+
+def test_forged_cursor_cannot_cross_tenants(rng):
+    """Tenant-isolation regression: a scan cursor embeds the tenant it was
+    issued for; presenting it as a DIFFERENT tenant (forged or replayed
+    token) must be refused with Status.FORBIDDEN as data — never serve the
+    embedded tenant's namespace."""
+    keys, vals = _corpus(rng, 120)
+    svc = IndexService.bulk_load(
+        {"alice": (keys, vals), "bob": (keys[:30], vals[:30] + 9)},
+        IndexConfig(auto_merge_threshold=None),
+        ServiceConfig(max_batch=1024, merge_threshold=None))
+    alice_page = svc.scan_page(start=b"", page_size=5, tenant="alice")
+    assert alice_page.cursor is not None
+    # bob replays alice's cursor — and gets a typed refusal, zero entries
+    forged = svc.scan_page(cursor=alice_page.cursor, tenant="bob")
+    assert forged.status == Status.FORBIDDEN
+    assert forged.entries == () and forged.cursor is None
+    # hand-forging a token for another tenant is equally refused
+    from repro.serve.service import _make_cursor
+
+    crafted = _make_cursor("alice", b"", 50)
+    res = svc.scan_page(cursor=crafted, tenant="bob")
+    assert res.status == Status.FORBIDDEN and res.entries == ()
+    # omitting the tenant resolves to default_tenant — still mismatched
+    res = svc.scan_page(cursor=crafted)
+    assert res.status == Status.FORBIDDEN
+    # the rightful owner's continuation still works
+    cont = svc.scan_page(cursor=alice_page.cursor, tenant="alice")
+    assert cont.status == Status.OK and len(cont.entries) > 0
+    for k, _ in cont.entries:
+        assert b"\x1f" not in k
+    svc.close()
+
+
+def test_maintenance_failures_surface_in_stats(rng, caplog):
+    """A persistently failing compaction must be visible: counted in
+    ServiceStats.maintenance_errors, last error string surfaced, logged once
+    per distinct error — and the service must keep serving."""
+    import logging
+
+    import time
+
+    keys, vals = _corpus(rng, 100)
+    svc = IndexService.bulk_load(
+        {"t": (keys, vals)},
+        IndexConfig(delta_capacity=16, auto_merge_threshold=None),
+        ServiceConfig(max_batch=1024, default_tenant="t", merge_threshold=0.5,
+                      maintenance_interval_ms=60_000.0))
+    boom = RuntimeError("injected merge failure")
+
+    def failing_merge(*a, **kw):
+        raise boom
+
+    # inject BEFORE the delta crosses the threshold: every compaction the
+    # flusher/maintenance attempts from here on fails at the epoch seam
+    svc.index.begin_merge = failing_merge
+    with caplog.at_level(logging.ERROR, logger="repro.serve.service"):
+        svc.execute([PutRequest(b"f-%03d" % i, i) for i in range(10)])
+        for want in (1, 2, 3):             # retries of the SAME error
+            svc._maint_wake.set()
+            deadline = time.monotonic() + 5.0
+            while time.monotonic() < deadline:
+                if svc.stats().maintenance_errors >= want:
+                    break
+                time.sleep(0.005)
+    s = svc.stats()
+    assert s.maintenance_errors >= 1
+    assert "injected merge failure" in (s.last_maintenance_error or "")
+    logged = [r for r in caplog.records
+              if "injected merge failure" in r.getMessage()]
+    assert len(logged) == 1, "one log line per DISTINCT error, not per retry"
+    # the request path is unaffected by the failing maintenance loop
+    assert svc.execute([GetRequest(keys[0])])[0].value == int(vals[0])
+    svc.close()
+
+
+def test_stats_polling_never_syncs_device(rng, monkeypatch):
+    """ServiceStats reads host mirrors only: stats()/maintenance polling must
+    never call the device-syncing delta_fill_fraction."""
+    from repro.core import tensor_index as tix
+
+    keys, vals = _corpus(rng, 80)
+    svc = IndexService.bulk_load(
+        {"t": (keys, vals)}, IndexConfig(auto_merge_threshold=None),
+        ServiceConfig(max_batch=1024, default_tenant="t",
+                      merge_threshold=0.9))
+    svc.execute([PutRequest(b"s-%03d" % i, i) for i in range(10)])
+
+    def forbidden(ti):
+        raise AssertionError("stats polling must not sync the device")
+
+    monkeypatch.setattr(tix, "delta_fill_fraction", forbidden)
+    s = svc.stats()
+    assert s.delta_fill > 0.0          # mirror, not device
+    assert svc.maintenance_step() is False  # below threshold: mirror check only
     svc.close()
 
 
