@@ -71,15 +71,27 @@ def _direct_execute(ti, batch, host_pool):
         n_found = int(found.sum())
     if scans:
         qb, ql = pad_queries([r.start for r in scans], ti.width)
-        eids, valid = scan_batch(ti, jnp.asarray(qb), jnp.asarray(ql), SCAN_WINDOW)
-        vlo, vhi = lookup_values(ti, jnp.maximum(eids, 0), jnp.zeros_like(eids, bool))
-        eids, valid = np.asarray(eids), np.asarray(valid)
+        eids, valid, isd = scan_batch(ti, jnp.asarray(qb), jnp.asarray(ql),
+                                      SCAN_WINDOW)
+        vlo, vhi = lookup_values(ti, jnp.maximum(eids, 0), isd)
+        # delta hits need their key bytes gathered device-side (the frozen
+        # host pool cannot serve them) — same plan the facade runs
+        e = jnp.minimum(jnp.maximum(eids, 0), ti.de_off.shape[0] - 1)
+        didx = jnp.minimum(
+            jnp.take(ti.de_off, e)[..., None]
+            + jnp.arange(ti.width, dtype=jnp.int32),
+            ti.db_bytes.shape[0] - 1)
+        dlen, dbytes = np.asarray(jnp.take(ti.de_len, e)), \
+            np.asarray(jnp.take(ti.db_bytes, didx))
+        eids, valid, isd = np.asarray(eids), np.asarray(valid), np.asarray(isd)
         svals = (np.asarray(vhi).astype(np.int64) << 32) | \
             np.asarray(vlo).view(np.uint32).astype(np.int64)
         entries = [
-            [(pool[ent_off[e]: ent_off[e] + ent_len[e]].tobytes(), v)
-             for e, v, ok in zip(eids[row].tolist(), svals[row].tolist(),
-                                 valid[row].tolist()) if ok]
+            [((dbytes[row, col, : dlen[row, col]].tobytes() if d else
+               pool[ent_off[e]: ent_off[e] + ent_len[e]].tobytes()), v)
+             for col, (e, v, ok, d) in enumerate(zip(
+                 eids[row].tolist(), svals[row].tolist(),
+                 valid[row].tolist(), isd[row].tolist())) if ok]
             for row in range(eids.shape[0])
         ]
     return ti, n_found
@@ -95,7 +107,8 @@ def _bulk_execute(index: StringIndex, batch):
     if gets:
         index.get_batch([r.key for r in gets])
     if scans:
-        eids, valid = index.scan_batch([r.start for r in scans], SCAN_WINDOW)
+        eids, valid, _isd = index.scan_batch([r.start for r in scans],
+                                             SCAN_WINDOW)
         np.asarray(eids)
 
 

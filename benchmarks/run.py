@@ -35,7 +35,7 @@ def main() -> None:
     from . import (api_bench, compaction_bench, fig1_prefix_skew, fig7_pmss,
                    fig8_ycsb, fig9_ycsb_mixed, fig11_space, fig13_unique_rate,
                    fig14_models, fig15_cnode, fig16_subtrie, kernel_bench,
-                   service_bench, table2_hardness, table3_height)
+                   scan_bench, service_bench, table2_hardness, table3_height)
 
     n = 3000 if args.quick else 20000
     benches = {
@@ -60,6 +60,7 @@ def main() -> None:
                                              1024 if args.quick else 2048,
                                              quick=args.quick),
         "compaction": lambda: compaction_bench.run(quick=args.quick),
+        "scan": lambda: scan_bench.run(quick=args.quick),
     }
     selected = args.only.split(",") if args.only else list(benches)
     print("name,us_per_call,derived")
@@ -68,11 +69,12 @@ def main() -> None:
         rows = benches[name]()
         dt = time.perf_counter() - t0
         _write_csv(rows, os.path.join(args.out, f"{name}.csv"))
-        if name in ("traversal", "api", "service", "compaction"):
+        if name in ("traversal", "api", "service", "compaction", "scan"):
             # repo-root acceptance artifacts: fused-vs-jnp traversal,
             # facade dispatch overhead (DESIGN.md §8), request-plane
             # coalescing/throughput (DESIGN.md §9), epoch-compaction
-            # merge scaling + p99-under-merge (DESIGN.md §10)
+            # merge scaling + p99-under-merge (DESIGN.md §10), delta-aware
+            # scan vs frozen-only legacy (DESIGN.md §11)
             root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
             with open(os.path.join(root, f"BENCH_{name}.json"), "w") as f:
                 json.dump({"bench": name, "quick": bool(args.quick),

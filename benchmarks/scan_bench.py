@@ -1,0 +1,122 @@
+"""Delta-aware scan bench: read-your-writes scans vs the frozen-only legacy.
+
+Measures ``scan_batch`` (rank + two-way merge of the frozen order with the
+live delta view, DESIGN.md §11) against an in-bench reimplementation of
+the LEGACY frozen-only scan (rank + contiguous window gather — the exact
+code this PR replaced), across delta fill levels and both traversal
+backends.  Emitted as ``BENCH_scan.json`` via ``benchmarks.run``; the
+acceptance bar is the zero-fill row: with an EMPTY delta the merge
+degenerates to the frozen stream, and the delta-aware engine must stay
+within 1.3x of the frozen-only scan it replaced.
+
+Also asserts, per fill level, that the two backends return bit-identical
+``(eids, valid, is_delta)`` windows (the §7/§11 contract) and that the
+delta-aware result at fill 0 equals the legacy result exactly.
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import freeze, insert_batch, pad_queries, scan_batch
+from repro.core.tensor_index import TensorIndex, delete_batch, rank_batch_impl
+from repro.kernels.ops import resolve_interpret
+
+from .common import bulkload, dataset
+
+WINDOW = 16
+
+
+@partial(jax.jit, static_argnames=("window", "backend", "interpret"))
+def _legacy_frozen_scan(ti: TensorIndex, qbytes, qlens, window: int,
+                        backend: str, interpret):
+    """The pre-§11 scan: rank into the frozen order + contiguous window."""
+    r = rank_batch_impl(ti, qbytes, qlens, backend, interpret)
+    n = ti.ent_sorted.shape[0]
+    idx = r[:, None] + jnp.arange(window, dtype=jnp.int32)[None, :]
+    valid = (idx < n) & (ti.root_item != 0)
+    eids = jnp.take(ti.ent_sorted, jnp.minimum(idx, n - 1))
+    return jnp.where(valid, eids, -1), valid
+
+
+def _best_of(fn, reps: int) -> float:
+    fn()                                   # warmup (compile)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(n: int = 8000, n_queries: int = 1024, reps: int = 5,
+        quick: bool = False) -> list:
+    if quick:
+        n, n_queries = min(n, 3000), min(n_queries, 512)
+    keys = dataset("reddit", n)
+    b, _ = bulkload("LITS", keys)
+    dcap = max(1024, n // 4)
+    ti0 = freeze(b, delta_capacity=dcap)
+    rng = np.random.default_rng(7)
+    starts = [keys[i] for i in rng.integers(0, len(keys), n_queries)]
+    qb, ql = pad_queries(starts, ti0.width)
+    qb, ql = jnp.asarray(qb), jnp.asarray(ql)
+    interpret = resolve_interpret(None)
+
+    # delta fill levels: 0 (the 1.3x acceptance row), then live mixes of
+    # fresh inserts + tombstones at 25% / 50% of delta capacity
+    tis = {0.0: ti0}
+    for fill in (0.25, 0.5):
+        n_mut = int(dcap * fill)
+        n_ins, n_del = (2 * n_mut) // 3, n_mut - (2 * n_mut) // 3
+        fresh = [b"scan-bench-%06d" % i for i in range(n_ins)]
+        fb, fl = pad_queries(fresh, ti0.width)
+        z = jnp.zeros(n_ins, jnp.int32)
+        ti, ins, _ = insert_batch(ti0, jnp.asarray(fb), jnp.asarray(fl),
+                                  z + 1, z)
+        assert bool(np.asarray(ins).all())
+        dead = [keys[i] for i in rng.choice(len(keys), n_del, replace=False)]
+        db_, dl_ = pad_queries(dead, ti0.width)
+        ti, deleted, rej = delete_batch(ti, jnp.asarray(db_), jnp.asarray(dl_))
+        assert bool(np.asarray(deleted).all()) and not bool(np.asarray(rej).any())
+        tis[fill] = ti
+
+    rows = []
+    entries = n_queries * WINDOW * reps
+    for fill, ti in sorted(tis.items()):
+        # backend bit-identity at this fill level (the §11 contract)
+        out_j = scan_batch(ti, qb, ql, WINDOW, backend="jnp")
+        out_p = scan_batch(ti, qb, ql, WINDOW, backend="pallas",
+                           interpret=interpret)
+        for a, bb in zip(out_j, out_p):
+            assert (np.asarray(a) == np.asarray(bb)).all(), \
+                f"backend divergence at fill={fill}"
+        row = {"bench": "scan", "dataset": "reddit", "n": len(keys),
+               "n_queries": n_queries, "window": WINDOW,
+               "delta_fill": fill, "delta_capacity": dcap}
+        for backend in ("jnp", "pallas"):
+            t_aware = _best_of(
+                lambda: scan_batch(ti, qb, ql, WINDOW, backend=backend,
+                                   interpret=interpret), reps)
+            t_frozen = _best_of(
+                lambda: _legacy_frozen_scan(ti, qb, ql, WINDOW, backend,
+                                            interpret), reps)
+            row[f"{backend}_aware_us"] = round(t_aware * 1e6, 1)
+            row[f"{backend}_frozen_us"] = round(t_frozen * 1e6, 1)
+            row[f"{backend}_aware_mes"] = round(entries / (t_aware * reps) / 1e6, 3)
+            row[f"{backend}_ratio_vs_frozen"] = round(t_aware / t_frozen, 3)
+        if fill == 0.0:
+            # the legacy scan IS the delta-aware scan at zero fill: results
+            # must agree exactly (and nothing may claim to be a delta hit)
+            le, lv = (np.asarray(x) for x in
+                      _legacy_frozen_scan(ti, qb, ql, WINDOW, "jnp",
+                                          interpret))
+            ae, av, ad = (np.asarray(x) for x in out_j)
+            assert (le == ae).all() and (lv == av).all() and not ad.any()
+            row["zero_fill_bit_identical_to_legacy"] = True
+        rows.append(row)
+    return rows

@@ -59,7 +59,9 @@ def main() -> None:
     r2 = index.execute(waves)
     print(f"after {len(waves)} more puts: auto-merged={r2.merged}, "
           f"delta fill={r2.delta_fill:.2f}, merges so far={index.merge_count}")
-    print(f"merged keys now scannable: "
+    # scans are read-your-writes (DESIGN.md §11): unmerged delta puts are
+    # scannable immediately — the merge only changes the physical layout
+    print(f"freshly-put keys scannable: "
           f"{[k for k, _ in index.scan(b'wave-', 3)]}")
 
     # 4. versioned snapshot roundtrip: save -> load -> identical answers

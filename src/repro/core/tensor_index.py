@@ -8,7 +8,8 @@ query-side operations are single jitted functions, composable under
 * :func:`search_batch`   — paper Alg. 2, batched traversal (pluggable backend)
 * :func:`base_search`    — traversal + terminal resolve, no delta probe
 * :func:`rank_batch`     — ordered rank for range scans (binary search)
-* :func:`scan_batch`     — range scan windows over the frozen sort order
+* :func:`scan_batch`     — delta-aware range scans (read-your-writes: a
+  two-way merge of the frozen order with the live delta view, DESIGN.md §11)
 * :func:`insert_batch`   — log-structured delta-buffer inserts (DESIGN.md §2)
 * :func:`delete_batch`   — delta-buffer tombstones (shadow the frozen base;
   reconciled by :func:`merge_delta`, DESIGN.md §9)
@@ -63,7 +64,7 @@ from .builder import (
     PAYLOAD_MASK,
 )
 from .hpt import MAX_CDF_STEPS, get_cdf_impl
-from .walk import rank_sorted, resolve_terminal, walk_terminal
+from .walk import rank_sorted, resolve_terminal, scan_merged, walk_terminal
 from repro.kernels.strops import (
     gather_bytes as _gather_bytes,
     hash16 as _hash16,
@@ -90,8 +91,8 @@ STATIC_FIELDS = ("width", "max_iters", "cnode_cap", "rank_iters",
         "key_bytes", "ent_off", "ent_len", "ent_val_lo", "ent_val_hi",
         "ent_sorted", "cdf_tab", "prob_tab", "root_item",
         "db_bytes", "db_used", "de_off", "de_len", "de_val_lo", "de_val_hi",
-        "de_hash", "de_tomb", "de_count", "dh_slot", "delta_overflow",
-        "epoch",
+        "de_hash", "de_tomb", "de_count", "dh_slot", "ds_order",
+        "delta_overflow", "epoch",
     ],
     meta_fields=list(STATIC_FIELDS),
 )
@@ -133,6 +134,11 @@ class TensorIndex:
     de_tomb: jax.Array           # per-entry tombstone flag (DELETE support)
     de_count: jax.Array
     dh_slot: jax.Array
+    # incrementally-sorted view of the claimed delta region (DESIGN.md §11):
+    # ds_order[:de_count] lists delta entry ids in lexicographic key order
+    # (tombstones included — the scan merge consumes them to shadow base
+    # entries).  Maintained by _mutate_batch, reset by merge_delta/freeze.
+    ds_order: jax.Array
     delta_overflow: jax.Array
     # compaction epoch: increments at every merge_delta (snapshot format v3).
     # A data field (device scalar), NOT static metadata — a static field
@@ -228,6 +234,7 @@ def freeze(
         de_tomb=jnp.zeros(dcap, bool),
         de_count=jnp.asarray(np.int32(0)),
         dh_slot=jnp.full(hcap, -1, jnp.int32),
+        ds_order=jnp.zeros(dcap, jnp.int32),
         delta_overflow=jnp.asarray(False),
         epoch=jnp.asarray(np.int32(epoch)),
         width=int(b.width),
@@ -458,28 +465,49 @@ def rank_batch(ti: TensorIndex, qbytes: jax.Array, qlens: jax.Array,
                            interpret)
 
 
+def _scan_n_base(ti: TensorIndex) -> jax.Array:
+    """Live frozen-entry count for the scan merge: an EMPTY root means zero
+    live base entries — ``ent_sorted`` then holds only the freeze pad
+    sentinel (pools cannot be zero-sized), which must not scan.  The delta
+    stream is NOT gated on this: a delta-only index (empty base, live
+    delta) scans its unmerged inserts."""
+    return jnp.where(ti.root_item != 0,
+                     jnp.int32(ti.ent_sorted.shape[0]), jnp.int32(0))
+
+
 @partial(jax.jit, static_argnames=("window", "backend", "interpret"))
 def _scan_batch_jit(ti: TensorIndex, qbytes: jax.Array, qlens: jax.Array,
                     window: int, backend: str, interpret: bool | None):
-    r = rank_batch_impl(ti, qbytes, qlens, backend, interpret)
-    n = ti.ent_sorted.shape[0]
-    idx = r[:, None] + jnp.arange(window, dtype=jnp.int32)[None, :]
-    # an EMPTY root means zero live entries: ent_sorted then holds only the
-    # freeze pad sentinel (pools cannot be zero-sized), which must not scan
-    valid = (idx < n) & (ti.root_item != 0)
-    eids = jnp.take(ti.ent_sorted, jnp.minimum(idx, n - 1))
-    return jnp.where(valid, eids, -1), valid
+    if backend == "pallas":
+        from repro.kernels import ops as _kops  # lazy: keeps core import light
+
+        return _kops.fused_scan(ti, qbytes, qlens, window=window,
+                                interpret=interpret)
+    return scan_merged(
+        qbytes, qlens,
+        ti.ent_sorted, ti.ent_off, ti.ent_len, ti.key_bytes, _scan_n_base(ti),
+        ti.ds_order, ti.de_off, ti.de_len, ti.db_bytes, ti.de_tomb,
+        ti.de_count, window=window, rank_iters=ti.rank_iters)
 
 
 def scan_batch(ti: TensorIndex, qbytes: jax.Array, qlens: jax.Array,
                window: int = 16, *, backend: str | None = None,
                interpret: bool | None = None):
-    """Range scan: entry ids of the next ``window`` keys >= query, plus validity mask.
+    """Delta-aware range scan: the next ``window`` keys >= query in the LIVE
+    index order — read-your-writes (DESIGN.md §11).
 
-    Scans read the frozen snapshot order; delta-buffer keys become visible
-    after the next merge (epoch semantics, DESIGN.md §2).  ``backend``
-    selects the rank engine (``"jnp"`` | fused ``"pallas"``; ``None`` ->
-    ``REPRO_SEARCH_BACKEND``).
+    Returns ``(eids, valid, is_delta)``, each ``(B, window)``: a two-way
+    merge of the frozen ``ent_sorted`` window with the sorted live-delta
+    view, where unmerged delta inserts appear immediately and tombstoned
+    keys are suppressed (a tombstone shadows its base entry; a resurrected
+    put serves the delta value).  ``eids`` indexes the base entry pools
+    where ``~is_delta`` and the delta pools where ``is_delta`` — exactly
+    the :func:`lookup_values` contract, so value fetch is unchanged.
+
+    ``backend`` selects the engine: the ``"jnp"`` reference or the fused
+    ``"pallas"`` rank+merge kernel (:mod:`repro.kernels.scan`) — both run
+    the shared :func:`repro.core.walk.scan_merged`, so results are
+    bit-identical by construction.  ``None`` -> ``REPRO_SEARCH_BACKEND``.
     """
     return _scan_batch_jit(ti, qbytes, qlens, window,
                            resolve_search_backend(backend), interpret)
@@ -488,6 +516,45 @@ def scan_batch(ti: TensorIndex, qbytes: jax.Array, qlens: jax.Array,
 # ---------------------------------------------------------------------------
 # delta-buffer inserts (log-structured; host merge = minor compaction)
 # ---------------------------------------------------------------------------
+
+def _delta_sort_order_impl(db_bytes, de_off, de_len, de_count,
+                           width: int) -> jax.Array:
+    """Sorted view of the claimed delta region: entry ids in key order.
+
+    Keys are gathered as zero-masked ``width``-byte windows, packed 4 bytes
+    per big-endian uint32 word (order-preserving), and lexsorted with the
+    true length as the final tie-break — exactly the ``str_cmp_full``
+    ordering rule (padded bytes first, then length), so ranks computed by
+    :func:`repro.core.walk.rank_sorted` over this view agree with the
+    frozen ``ent_sorted`` order.  Unclaimed tail slots (``>= de_count``)
+    carry a claimed-last major key and never rank inside the live region.
+    """
+    dcap = de_off.shape[0]
+    kb = _gather_bytes(db_bytes, de_off, width)
+    cols = jnp.arange(width)[None, :]
+    kb = jnp.where(cols < de_len[:, None], kb, 0)
+    pad = (-width) % 4
+    if pad:
+        kb = jnp.concatenate([kb, jnp.zeros((dcap, pad), kb.dtype)], axis=1)
+    w = kb.astype(jnp.uint32).reshape(dcap, -1, 4)
+    packed = (w[:, :, 0] << 24) | (w[:, :, 1] << 16) | (w[:, :, 2] << 8) \
+        | w[:, :, 3]
+    unclaimed = (jnp.arange(dcap, dtype=jnp.int32)
+                 >= de_count).astype(jnp.int32)
+    # jnp.lexsort: LAST key is primary — claimed entries first, then the
+    # most-significant packed word downwards, length tie-break last
+    keys = (de_len,) + tuple(
+        packed[:, i] for i in range(packed.shape[1] - 1, -1, -1)
+    ) + (unclaimed,)
+    return jnp.lexsort(keys).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("width",))
+def delta_sort_order(db_bytes, de_off, de_len, de_count, width: int):
+    """Jitted :func:`_delta_sort_order_impl` — the snapshot-load seam for
+    reconstructing ``ds_order`` from pre-v4 files (no view was stored)."""
+    return _delta_sort_order_impl(db_bytes, de_off, de_len, de_count, width)
+
 
 def _mutate_batch(ti: TensorIndex, kbytes: jax.Array, klens: jax.Array,
                   val_lo: jax.Array, val_hi: jax.Array, is_del: jax.Array):
@@ -594,11 +661,18 @@ def _mutate_batch(ti: TensorIndex, kbytes: jax.Array, klens: jax.Array,
         step, carry0, (kbytes, klens, val_lo, val_hi, qh, bfound, is_del))
     (dh_slot, db_bytes, db_used, de_off, de_len, de_vlo, de_vhi, de_hash,
      de_tomb, de_count, overflow) = carry
+    # maintain the sorted delta view (DESIGN.md §11): the claimed KEY SET
+    # only changes when a fresh slot was claimed — in-place tombstone
+    # toggles and value updates keep the order, so the re-sort is skipped
+    ds_order = jax.lax.cond(
+        jnp.any(newly),
+        lambda: _delta_sort_order_impl(db_bytes, de_off, de_len, de_count, W),
+        lambda: ti.ds_order)
     nti = dataclasses.replace(
         ti, ent_val_lo=ent_val_lo, ent_val_hi=ent_val_hi, dh_slot=dh_slot,
         db_bytes=db_bytes, db_used=db_used, de_off=de_off, de_len=de_len,
         de_val_lo=de_vlo, de_val_hi=de_vhi, de_hash=de_hash, de_tomb=de_tomb,
-        de_count=de_count, delta_overflow=overflow,
+        de_count=de_count, ds_order=ds_order, delta_overflow=overflow,
     )
     return nti, bfound, newly, match, prev_live, rejected
 

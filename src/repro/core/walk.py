@@ -27,7 +27,9 @@ from .builder import (
     TAG_TRIE,
 )
 from .hpt import positions_impl
-from repro.kernels.strops import hash16, str_cmp_full, str_cmp_prefix, str_eq
+from repro.kernels.strops import (
+    hash16, str_cmp_full, str_cmp_pools, str_cmp_prefix, str_eq,
+)
 
 
 def item_tag(item: jax.Array) -> jax.Array:
@@ -140,18 +142,25 @@ def resolve_terminal(
 
 def rank_sorted(
     qbytes, qlens, ent_sorted, ent_off, ent_len, key_bytes,
-    *, rank_iters: int,
+    *, rank_iters: int, n_live=None,
 ):
     """First rank r such that key(ent_sorted[r]) >= query (binary search).
 
     Flat-pool implementation shared by the jnp reference (`rank_batch`) and
     the fused Pallas rank kernel (:mod:`repro.kernels.rank`) — the same
     structural bit-identity contract as ``walk_terminal`` (DESIGN.md §7).
+
+    ``n_live`` (a traced scalar) bounds the search to the first ``n_live``
+    rows of ``ent_sorted`` — used by the delta-aware scan to rank into the
+    live region of the incrementally-sorted delta view, whose tail slots
+    are unclaimed.  ``None`` (the default) searches the whole table and
+    traces exactly as before, so the base-rank path is unchanged.
     """
     B = qbytes.shape[0]
     n = ent_sorted.shape[0]
     lo = jnp.zeros(B, jnp.int32)
-    hi = jnp.full(B, n, jnp.int32)
+    hi = jnp.full(B, n, jnp.int32) if n_live is None else \
+        jnp.broadcast_to(n_live.astype(jnp.int32), (B,))
 
     def body(_, carry):
         lo, hi = carry
@@ -167,3 +176,106 @@ def rank_sorted(
 
     lo, _ = jax.lax.fori_loop(0, rank_iters, body, (lo, hi))
     return lo
+
+
+def delta_rank_iters(dcap: int) -> int:
+    """Binary-search trip count covering a delta pool of ``dcap`` slots."""
+    import math
+
+    return int(math.ceil(math.log2(max(dcap, 2)))) + 2
+
+
+def scan_merged(
+    qbytes, qlens,
+    ent_sorted, ent_off, ent_len, key_bytes, n_base,
+    ds_order, de_off, de_len, db_bytes, de_tomb, n_delta,
+    *, window: int, rank_iters: int,
+):
+    """Delta-aware range scan: two-way merge of the frozen order and the
+    live delta view (DESIGN.md §11).
+
+    The frozen stream is ``ent_sorted[rank(q):n_base]`` (``n_base`` is a
+    traced scalar — 0 for an EMPTY root, where ``ent_sorted`` holds only
+    the freeze pad sentinel); the delta stream is ``ds_order[rank(q):
+    n_delta]``, the incrementally-sorted view over ALL claimed delta
+    entries (live inserts and tombstones).  The merge rule:
+
+    * a delta entry whose key equals the base candidate SHADOWS it (both
+      pointers advance; the delta entry is emitted if live, swallowed if
+      tombstoned) — this is how deletes hide base keys and resurrected
+      puts serve their fresh value;
+    * a strictly-smaller live delta entry is emitted (unmerged insert,
+      visible immediately); a strictly-smaller tombstone is skipped (a
+      delete of a delta-only key);
+    * otherwise the base entry is emitted.
+
+    Runs as ONE ``while_loop`` over the whole batch with an early-exit
+    condition (a lane stops once its window is full or both streams are
+    exhausted), so a converged batch stops paying per-step cost — the same
+    shape as ``walk_terminal``.  Shared verbatim by the jnp reference
+    (:func:`repro.core.tensor_index.scan_batch`) and the fused Pallas scan
+    kernel (:mod:`repro.kernels.scan`): backend bit-identity is structural.
+
+    Returns ``(eids, valid, is_delta)``, each ``(B, window)``; ``eids``
+    indexes the base entry pools where ``~is_delta`` and the delta entry
+    pools where ``is_delta`` (the :func:`lookup_values` contract).
+    """
+    B, W = qbytes.shape
+    n_arr = ent_sorted.shape[0]
+    d_arr = ds_order.shape[0]
+    n_base = jnp.broadcast_to(jnp.asarray(n_base, jnp.int32), (B,))
+    n_delta_s = jnp.asarray(n_delta, jnp.int32)
+    n_delta = jnp.broadcast_to(n_delta_s, (B,))
+    bi = rank_sorted(qbytes, qlens, ent_sorted, ent_off, ent_len, key_bytes,
+                     rank_iters=rank_iters)
+    cols = jnp.arange(window, dtype=jnp.int32)[None, :]
+
+    def frozen_only():
+        # EMPTY delta: the merge degenerates to the frozen stream — one
+        # contiguous window gather (the legacy scan), no merge loop and no
+        # delta rank.  This is what keeps zero-fill scans at parity with
+        # the frozen-only engine (BENCH_scan.json acceptance row).
+        idx = bi[:, None] + cols
+        valid = idx < n_base[:, None]
+        eids = jnp.take(ent_sorted, jnp.minimum(idx, n_arr - 1))
+        return (jnp.where(valid, eids, -1), valid,
+                jnp.zeros((B, window), bool))
+
+    def merged():
+        di = rank_sorted(qbytes, qlens, ds_order, de_off, de_len, db_bytes,
+                         rank_iters=delta_rank_iters(d_arr), n_live=n_delta)
+
+        def cond(st):
+            bi, di, k, _, _, _ = st
+            return jnp.any((k < window) & ((bi < n_base) | (di < n_delta)))
+
+        def body(st):
+            bi, di, k, oe, ov, od = st
+            b_ok = bi < n_base
+            d_ok = di < n_delta
+            active = (k < window) & (b_ok | d_ok)
+            be = jnp.take(ent_sorted, jnp.minimum(bi, n_arr - 1))
+            de = jnp.take(ds_order, jnp.minimum(di, d_arr - 1))
+            cmp = str_cmp_pools(
+                db_bytes, jnp.take(de_off, de), jnp.take(de_len, de),
+                key_bytes, jnp.take(ent_off, be), jnp.take(ent_len, be), W)
+            take_delta = d_ok & (~b_ok | (cmp <= 0))
+            shadows = take_delta & b_ok & (cmp == 0)
+            tomb = jnp.take(de_tomb, de)
+            emit = active & jnp.where(take_delta, ~tomb, b_ok)
+            val = jnp.where(take_delta, de, be)
+            slot = emit[:, None] & (cols == k[:, None])
+            oe = jnp.where(slot, val[:, None], oe)
+            ov = ov | slot
+            od = jnp.where(slot, take_delta[:, None], od)
+            bi = bi + (active & (~take_delta | shadows)).astype(jnp.int32)
+            di = di + (active & take_delta).astype(jnp.int32)
+            return bi, di, k + emit.astype(jnp.int32), oe, ov, od
+
+        st0 = (bi, di, jnp.zeros(B, jnp.int32),
+               jnp.full((B, window), -1, jnp.int32),
+               jnp.zeros((B, window), bool), jnp.zeros((B, window), bool))
+        _, _, _, oe, ov, od = jax.lax.while_loop(cond, body, st0)
+        return oe, ov, od
+
+    return jax.lax.cond(n_delta_s > 0, merged, frozen_only)

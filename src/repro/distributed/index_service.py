@@ -34,7 +34,8 @@ from repro.core import LITSBuilder, StringSet, freeze, lookup_values
 from repro.core.hpt import get_cdf_impl
 from repro.core.strings import sort_order
 from repro.core.tensor_index import (
-    STATIC_FIELDS, TensorIndex, base_search_impl, resolve_search_backend,
+    STATIC_FIELDS, TensorIndex, base_search_impl, pad_queries,
+    resolve_search_backend, scan_batch,
 )
 from repro.index import StringIndexBase
 
@@ -214,9 +215,14 @@ class DistributedStringIndex(StringIndexBase):
     the same typed batched-op surface as the local
     :class:`repro.index.StringIndex`: ``get_batch`` / ``execute`` with
     per-op :class:`~repro.index.Status` codes.  Serving snapshots are
-    immutable (delta probes are skipped shard-side), so PUTs, DELETEs and
-    SCANs report ``Status.UNSUPPORTED`` — rebuild via :meth:`build` to
-    ingest.  Front it with :class:`repro.serve.service.IndexService`
+    immutable (delta probes are skipped shard-side), so PUTs and DELETEs
+    report ``Status.UNSUPPORTED`` — rebuild via :meth:`build` to ingest.
+    SCANs are served (:meth:`scan_entries`): each shard runs the same
+    delta-aware ``scan_batch`` engine as the local index (with an empty
+    delta this reduces to the frozen order), and because the CDF partition
+    is a range partition of lexicographic order (DESIGN.md §5), per-shard
+    windows concatenate in shard order into the global window.  Front it
+    with :class:`repro.serve.service.IndexService`
     (DESIGN.md §9) to serve it as an async multi-tenant request plane —
     the service treats both implementations identically.
 
@@ -247,6 +253,8 @@ class DistributedStringIndex(StringIndexBase):
         self.sidx = dataclasses.replace(sidx, stacked=TensorIndex(**put))
         self._per_dest_capacity = per_dest_capacity
         self._rows = int(np.prod([mesh.shape[a] for a in self.shard_axes]))
+        self._shard_host: dict = {}   # shard id -> host entry-pool mirrors
+        #                               (immutable snapshot: cache is safe)
         self._fn = make_service_fn(
             self.sidx, mesh, axis=axis, per_dest_capacity=per_dest_capacity,
             shard_axes=shard_axes, backend=self.config.search_backend,
@@ -308,21 +316,99 @@ class DistributedStringIndex(StringIndexBase):
         hi = np.asarray(hi)[:B].astype(np.int64)
         return found, np.where(found, (hi << 32) | lo, 0)
 
-    def execute(self, batch):
-        """Typed batch entry point (GETs only on the read-only mesh service).
+    # -- range scans over the mesh (DESIGN.md §11) --------------------------
 
-        Failures stay data (the StringIndexBase contract): ops other than
-        GET report ``Status.UNSUPPORTED``, and a batch that trips a shard's
-        routing capacity marks every get ``Status.ROUTING_OVERFLOW`` (the
-        dropped subset is unknowable once routed — retry with a smaller
-        batch or a larger ``per_dest_capacity``).
+    def _shard_host_entries(self, s: int):
+        """Host mirrors of shard ``s``'s entry pools (scan results carry
+        real key bytes).  Serving snapshots are immutable, so the copies
+        are fetched once per shard and cached for the index's lifetime."""
+        if s not in self._shard_host:
+            ti = _slice_shard(self.sidx.stacked, s)
+            pool, eo, el = jax.device_get(
+                (ti.key_bytes, ti.ent_off, ti.ent_len))
+            self._shard_host[s] = (np.asarray(pool), np.asarray(eo),
+                                   np.asarray(el))
+        return self._shard_host[s]
+
+    def scan_entries(self, starts, window: int):
+        """Range scans: per-query lists of ``(key, value)`` pairs — the next
+        ``window`` keys >= each start across ALL shards.
+
+        Every shard runs the local ``scan_batch`` engine on its slice
+        (backend per ``config``), pinned to the FROZEN stream: like the
+        shard-side GET path, serving scans skip the delta region — a
+        hand-built stacked index carrying unmerged delta entries must not
+        scan keys that shard-side GETs cannot see (and whose bytes live
+        outside the cached base-pool mirrors).  The CDF partition is a
+        range partition of lexicographic order (§5: ``GetCDF`` is
+        monotone), so shard ``s``'s window sorts entirely before shard
+        ``s+1``'s — per-shard windows concatenate in shard order and the
+        first ``window`` survivors are the global answer.  Shards whose
+        range ends below a query return empty windows and drop out; a
+        smarter router would skip them up front (future work), correctness
+        does not depend on it.
         """
-        from repro.index import BatchResult, GetRequest, OpResult, Status
+        B = len(starts)
+        if B == 0:
+            return []
+        qb, ql = pad_queries(list(starts), self.sidx.width)
+        qb, ql = jnp.asarray(qb), jnp.asarray(ql)
+        backend = resolve_search_backend(self.config.search_backend)
+        interpret = self.config.resolved_interpret()
+        out = [[] for _ in range(B)]
+        for s in range(self.sidx.n_shards):
+            if all(len(o) >= window for o in out):
+                break
+            ti = _slice_shard(self.sidx.stacked, s)
+            # frozen-only: zero the delta stream bound (§11 — the scan
+            # merge short-circuits to the contiguous frozen window)
+            ti = dataclasses.replace(ti, de_count=jnp.zeros((), jnp.int32))
+            eids, valid, _isd = scan_batch(ti, qb, ql, window,
+                                           backend=backend,
+                                           interpret=interpret)
+            vlo, vhi = lookup_values(ti, jnp.maximum(eids, 0),
+                                     jnp.zeros_like(valid))
+            eids, valid, vlo, vhi = (np.asarray(x) for x in jax.device_get(
+                (eids, valid, vlo, vhi)))
+            if not valid.any():
+                continue    # nothing from this shard: skip the (cached)
+                #             full-pool host mirror fetch entirely
+            vals = (vhi.astype(np.int64) << 32) \
+                | vlo.view(np.uint32).astype(np.int64)
+            pool, eo, el = self._shard_host_entries(s)
+            for i in range(B):
+                room = window - len(out[i])
+                if room <= 0:
+                    continue
+                for e, ok, v in zip(eids[i].tolist(), valid[i].tolist(),
+                                    vals[i].tolist()):
+                    if not ok or room <= 0:
+                        break
+                    out[i].append((pool[eo[e]: eo[e] + el[e]].tobytes(), v))
+                    room -= 1
+        return out
+
+    def execute(self, batch):
+        """Typed batch entry point (GETs + SCANs on the read-only mesh service).
+
+        Failures stay data (the StringIndexBase contract): mutating ops
+        (PUT/DELETE) report ``Status.UNSUPPORTED``, and a batch that trips
+        a shard's routing capacity marks every get
+        ``Status.ROUTING_OVERFLOW`` (the dropped subset is unknowable once
+        routed — retry with a smaller batch or a larger
+        ``per_dest_capacity``).  Scans run through :meth:`scan_entries`
+        (shard-local delta-aware engine + ordered-range concatenation).
+        """
+        from repro.index import (
+            BatchResult, GetRequest, OpResult, ScanRequest, Status,
+        )
 
         results = [None] * len(batch)
         gets = [(i, r) for i, r in enumerate(batch) if isinstance(r, GetRequest)]
+        scans = [(i, r) for i, r in enumerate(batch)
+                 if isinstance(r, ScanRequest)]
         for i, r in enumerate(batch):
-            if not isinstance(r, GetRequest):
+            if not isinstance(r, (GetRequest, ScanRequest)):
                 results[i] = OpResult(Status.UNSUPPORTED)
         if gets:
             try:
@@ -334,6 +420,16 @@ class DistributedStringIndex(StringIndexBase):
             else:
                 self._map_get_results(gets, found, vals, self.sidx.width,
                                       results)
+        if scans:
+            default_w = getattr(self.config, "scan_window", 16)
+            by_window = {}
+            for i, r in scans:
+                w = default_w if r.window is None else r.window
+                by_window.setdefault(w, []).append((i, r))
+            for w, group in by_window.items():
+                entries = self.scan_entries([r.start for _, r in group], w)
+                for (i, _r), ent in zip(group, entries):
+                    results[i] = OpResult(Status.OK, entries=tuple(ent))
         return BatchResult(results=results, n_get=len(gets),
-                           n_put=0, n_scan=0, n_delete=0,
+                           n_put=0, n_scan=len(scans), n_delete=0,
                            merged=False, delta_fill=0.0)

@@ -27,9 +27,11 @@ tests/test_string_index.py): within one ``execute`` call, **puts apply
 first**, then gets and scans observe the post-put index — i.e. the batch is
 equivalent to the legacy sequence ``insert_batch(all puts)`` →
 ``search_batch(all gets)`` → ``scan_batch(all scans)``, bit-identically on
-both traversal backends.  Gets see fresh puts through the delta probe;
-scans keep the frozen-epoch semantics of DESIGN.md §2 (delta keys become
-scannable after the next merge, which ``execute`` may itself trigger).
+both traversal backends.  Gets see fresh puts through the delta probe, and
+scans are **read-your-writes** too (DESIGN.md §11): ``scan_batch`` merges
+the live delta view into the frozen order, so unmerged inserts appear
+immediately and deleted keys never scan — point and range reads agree on
+every epoch.
 
 The free functions in :mod:`repro.core.tensor_index` remain supported as
 the kernel-level seam underneath this facade (legacy surface — see the
@@ -444,9 +446,9 @@ class StringIndex(StringIndexBase):
         Deletes are delta-buffer tombstones (DESIGN.md §9): a key in the
         delta gets its tombstone set in place; a key living only in the
         frozen base claims a new shadowing tombstone entry, reconciled as a
-        physical ``builder.delete`` at the next ``merge_delta``.  Gets
-        observe the delete immediately; scans keep frozen-epoch semantics
-        (a tombstoned base key stays scannable until the merge).
+        physical ``builder.delete`` at the next ``merge_delta``.  Gets AND
+        scans observe the delete immediately — the scan merge consumes the
+        tombstone to suppress its base entry (DESIGN.md §11).
         """
         if not len(keys):
             return np.zeros(0, bool), np.zeros(0, bool), False
@@ -469,7 +471,11 @@ class StringIndex(StringIndexBase):
         return deleted, rejected, merged
 
     def scan_batch(self, starts: Sequence[bytes], window: int):
-        """Range scans: (eids (B, window) int32, valid mask) over the frozen order."""
+        """Delta-aware range scans: ``(eids, valid, is_delta)``, each
+        ``(B, window)`` — read-your-writes (DESIGN.md §11).  Unmerged delta
+        inserts appear in order, tombstoned keys are suppressed; ``eids``
+        index the base pools where ``~is_delta`` and the delta pools where
+        ``is_delta`` (the ``lookup_values`` contract)."""
         qb, ql = pad_queries(list(starts), self.ti.width)
         return scan_batch(self.ti, jnp.asarray(qb), jnp.asarray(ql),
                           window, backend=self._backend,
@@ -563,21 +569,41 @@ class StringIndex(StringIndexBase):
                 by_window.setdefault(w, []).append((i, req))
             pool, ent_off, ent_len = self._host_entries()
             for w, group in by_window.items():
-                eids, valid = self.scan_batch([r.start for _, r in group], w)
-                vlo, vhi = lookup_values(
-                    self.ti, jnp.maximum(eids, 0), jnp.zeros_like(eids, bool))
+                eids, valid, isd = self.scan_batch([r.start for _, r in group], w)
+                vlo, vhi = lookup_values(self.ti, jnp.maximum(eids, 0), isd)
+                fetch = [eids, valid, isd, vlo, vhi]
+                if self._delta_fill > 0.0:
+                    # delta entries may appear in the window: gather their
+                    # key bytes device-side (the frozen host pool mirror
+                    # cannot serve them), bundled into the same sync
+                    e = jnp.minimum(jnp.maximum(eids, 0),
+                                    self.ti.de_off.shape[0] - 1)
+                    doff = jnp.take(self.ti.de_off, e)
+                    didx = jnp.minimum(
+                        doff[..., None]
+                        + jnp.arange(self.ti.width, dtype=jnp.int32),
+                        self.ti.db_bytes.shape[0] - 1)
+                    fetch += [jnp.take(self.ti.de_len, e),
+                              jnp.take(self.ti.db_bytes, didx)]
                 # ONE host sync per scan group
-                eids, valid, vlo, vhi = jax.device_get((eids, valid, vlo, vhi))
+                got = jax.device_get(fetch)
+                eids, valid, isd, vlo, vhi = got[:5]
+                dlen, dbytes = got[5:] if len(got) > 5 else (None, None)
                 vals = _join_values(vlo, vhi)
                 for row, (i, req) in enumerate(group):
-                    entries = tuple([
-                        (pool[ent_off[e]: ent_off[e] + ent_len[e]].tobytes(), v)
-                        for e, v, ok in zip(eids[row].tolist(),
-                                            vals[row].tolist(),
-                                            valid[row].tolist())
-                        if ok
-                    ])
-                    results[i] = OpResult(Status.OK, entries=entries)
+                    entries = []
+                    for col, (e, v, ok, d) in enumerate(zip(
+                            eids[row].tolist(), vals[row].tolist(),
+                            valid[row].tolist(), isd[row].tolist())):
+                        if not ok:
+                            continue
+                        if d:
+                            key = dbytes[row, col, : dlen[row, col]].tobytes()
+                        else:
+                            key = pool[ent_off[e]: ent_off[e] + ent_len[e]] \
+                                .tobytes()
+                        entries.append((key, v))
+                    results[i] = OpResult(Status.OK, entries=tuple(entries))
 
         return BatchResult(
             results=results,  # type: ignore[arg-type]

@@ -33,8 +33,10 @@ SNAPSHOT_MAGIC = "lits-snapshot"
 # v1 files load with an all-live delta buffer (no deletes were possible).
 # v3 adds the compaction ``epoch`` counter (DESIGN.md §10); v1/v2 files
 # load at epoch 0 (the lineage restarts counting from the snapshot).
-SNAPSHOT_VERSION = 3
-SUPPORTED_VERSIONS: Tuple[int, ...] = (1, 2, 3)
+# v4 adds the sorted live-delta view (``ds_order``, DESIGN.md §11 —
+# delta-aware scans); older files recompute it from the delta pools.
+SNAPSHOT_VERSION = 4
+SUPPORTED_VERSIONS: Tuple[int, ...] = (1, 2, 3, 4)
 
 _META_KEY = "__snapshot_meta__"
 _META_FIELDS = STATIC_FIELDS
@@ -96,7 +98,8 @@ def load_index(path: str) -> TensorIndex:
                 f"{path}: snapshot format version {version!r}; this build "
                 f"supports {SUPPORTED_VERSIONS}")
         synth = (("de_tomb",) if version < 2 else ()) + \
-            (("epoch",) if version < 3 else ())
+            (("epoch",) if version < 3 else ()) + \
+            (("ds_order",) if version < 4 else ())
         missing = [n for n in _data_fields()
                    if n not in z.files and n not in synth]
         if missing:
@@ -107,5 +110,13 @@ def load_index(path: str) -> TensorIndex:
         kw["de_tomb"] = jnp.zeros(kw["de_off"].shape[0], bool)
     if "epoch" not in kw:    # v1/v2: epochs didn't exist — lineage restarts
         kw["epoch"] = jnp.asarray(np.int32(0))
+    if "ds_order" not in kw:  # pre-v4: no sorted delta view was stored —
+        # recompute it from the (possibly non-empty) delta pools so
+        # delta-aware scans see the snapshot's unmerged inserts/tombstones
+        from repro.core.tensor_index import delta_sort_order
+
+        kw["ds_order"] = delta_sort_order(
+            kw["db_bytes"], kw["de_off"], kw["de_len"], kw["de_count"],
+            width=int(header["meta"]["width"]))
     kw.update({k: int(header["meta"][k]) for k in _META_FIELDS})
     return TensorIndex(**kw)

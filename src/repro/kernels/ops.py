@@ -26,6 +26,7 @@ from .cnode_probe import cnode_probe_pallas
 from .hpt_cdf import hpt_cdf_pallas
 from .hpt_locate import hpt_locate_pallas
 from .rank import fused_rank_pallas
+from .scan import fused_scan_pallas
 from .traverse import fused_search_pallas
 
 KERNEL_BACKENDS = ("auto", "interpret", "native")
@@ -110,6 +111,29 @@ def fused_rank(ti, qbytes, qlens, *, block_b: int = 256,
     return fused_rank_pallas(
         qbytes, jnp.asarray(qlens, jnp.int32), ti.ent_sorted, ti.ent_off,
         ti.ent_len, ti.key_bytes, rank_iters=ti.rank_iters, block_b=block_b,
+        interpret=_interpret_default() if interpret is None else interpret,
+    )
+
+
+def fused_scan(ti, qbytes, qlens, *, window: int, block_b: int = 256,
+               interpret: bool | None = None):
+    """Fused delta-aware scan over a :class:`~repro.core.tensor_index.TensorIndex`.
+
+    Returns ``(eids, valid, is_delta)`` windows — bit-identical to the jnp
+    reference (`scan_batch`, shared impl ``core.walk.scan_merged``): the
+    frozen order and the sorted live-delta view merge inside one kernel,
+    tombstones suppressing shadowed base entries (DESIGN.md §11).  ``ti``
+    is duck-typed to avoid a core import; the EMPTY-root gate (zero live
+    base entries — the pad sentinel must not scan) is applied here so the
+    kernel sees only stream bounds.
+    """
+    n_base = jnp.where(ti.root_item != 0,
+                       jnp.int32(ti.ent_sorted.shape[0]), jnp.int32(0))
+    return fused_scan_pallas(
+        qbytes, jnp.asarray(qlens, jnp.int32), n_base, ti.ent_sorted,
+        ti.ent_off, ti.ent_len, ti.key_bytes, ti.de_count, ti.ds_order,
+        ti.de_off, ti.de_len, ti.db_bytes, ti.de_tomb,
+        window=window, rank_iters=ti.rank_iters, block_b=block_b,
         interpret=_interpret_default() if interpret is None else interpret,
     )
 

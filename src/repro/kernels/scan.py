@@ -1,0 +1,120 @@
+"""Pallas kernel: fused delta-aware range scan (rank + two-way merge).
+
+``scan_batch`` is a rank into the frozen sorted order, a rank into the
+sorted live-delta view, and a per-query merge loop that interleaves both
+streams while tombstones suppress shadowed base entries (DESIGN.md §11).
+The jnp reference replays that as a cascade of XLA gathers per merge step;
+here the sorted-order tables, entry tables, the key pool AND the delta
+pools all ride whole into VMEM and the ranks plus the entire merge loop
+run inside one kernel per query block.
+
+Bit-exactness contract (DESIGN.md §7/§11): the kernel body calls the
+*same* merge implementation the jnp backend uses —
+:func:`repro.core.walk.scan_merged` over flat pools, built on
+:func:`repro.kernels.strops.str_cmp_full` / ``str_cmp_pools`` — so the
+returned ``(eids, valid, is_delta)`` windows are bit-identical to the
+reference by construction, not by tolerance.
+
+Off-TPU the kernel executes with ``interpret=True`` (resolved once per
+process in :mod:`repro.kernels.ops`); on TPU the tables' BlockSpecs map
+every pool whole into VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.walk import scan_merged
+
+DEFAULT_BLOCK_B = 256
+
+
+def _scan_kernel(
+    qbytes_ref, qlens_ref, n_base_ref, n_delta_ref,
+    ent_sorted_ref, ent_off_ref, ent_len_ref, key_bytes_ref,
+    ds_order_ref, de_off_ref, de_len_ref, db_bytes_ref, de_tomb_ref,
+    eid_ref, valid_ref, isd_ref,
+    *, window: int, rank_iters: int,
+):
+    qbytes = qbytes_ref[...]                 # (BB, W) uint8
+    qlens = qlens_ref[...][:, 0]             # (BB,)
+    n_base = n_base_ref[0, 0]
+    n_delta = n_delta_ref[0, 0]
+    # the SAME two-way merge the jnp backend runs (core.walk.scan_merged)
+    eids, valid, isd = scan_merged(
+        qbytes, qlens,
+        ent_sorted_ref[0, :], ent_off_ref[0, :], ent_len_ref[0, :],
+        key_bytes_ref[0, :], n_base,
+        ds_order_ref[0, :], de_off_ref[0, :], de_len_ref[0, :],
+        db_bytes_ref[0, :], de_tomb_ref[0, :] != 0, n_delta,
+        window=window, rank_iters=rank_iters,
+    )
+    eid_ref[...] = eids
+    valid_ref[...] = valid.astype(jnp.int32)
+    isd_ref[...] = isd.astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "rank_iters", "block_b", "interpret"),
+)
+def fused_scan_pallas(
+    qbytes: jax.Array,        # (B, W) uint8, zero padded
+    qlens: jax.Array,         # (B,) int32
+    n_base: jax.Array,        # scalar int32: live frozen-entry count
+    ent_sorted: jax.Array,
+    ent_off: jax.Array,
+    ent_len: jax.Array,
+    key_bytes: jax.Array,
+    n_delta: jax.Array,       # scalar int32: claimed delta-entry count
+    ds_order: jax.Array,
+    de_off: jax.Array,
+    de_len: jax.Array,
+    db_bytes: jax.Array,
+    de_tomb: jax.Array,
+    *,
+    window: int,
+    rank_iters: int,
+    block_b: int = DEFAULT_BLOCK_B,
+    interpret: bool = True,
+):
+    """Fused delta-aware scan: ``(B, window)`` (eids, valid, is_delta).
+
+    Tables ride whole into the kernel (one ``(1, N)`` VMEM-resident block
+    each) while queries stream in ``block_b``-row blocks over the grid —
+    the same layout as the fused traversal and rank engines.
+    """
+    B, W = qbytes.shape
+    Bp = ((B + block_b - 1) // block_b) * block_b
+    qb = jnp.zeros((Bp, W), qbytes.dtype).at[:B].set(qbytes)
+    ql = jnp.zeros((Bp, 1), jnp.int32).at[:B, 0].set(qlens.astype(jnp.int32))
+    nb = jnp.broadcast_to(jnp.asarray(n_base, jnp.int32), (1, 1))
+    nd = jnp.broadcast_to(jnp.asarray(n_delta, jnp.int32), (1, 1))
+    tables2d = [t.reshape(1, -1) for t in (
+        ent_sorted, ent_off, ent_len, key_bytes,
+        ds_order, de_off, de_len, db_bytes, de_tomb.astype(jnp.int32),
+    )]
+
+    def _blockspec(shape):
+        return pl.BlockSpec(shape, lambda i: (0, 0))
+
+    qspec = pl.BlockSpec((block_b, W), lambda i: (i, 0))
+    vspec = pl.BlockSpec((block_b, 1), lambda i: (i, 0))
+    wspec = pl.BlockSpec((block_b, window), lambda i: (i, 0))
+    in_specs = (
+        [qspec, vspec, _blockspec((1, 1)), _blockspec((1, 1))]
+        + [_blockspec(t.shape) for t in tables2d]
+    )
+    out_shape = tuple(
+        jax.ShapeDtypeStruct((Bp, window), jnp.int32) for _ in range(3))
+    eids, valid, isd = pl.pallas_call(
+        functools.partial(_scan_kernel, window=window, rank_iters=rank_iters),
+        grid=(Bp // block_b,),
+        in_specs=in_specs,
+        out_specs=(wspec, wspec, wspec),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(qb, ql, nb, nd, *tables2d)
+    return eids[:B], valid[:B] != 0, isd[:B] != 0

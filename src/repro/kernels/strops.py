@@ -64,6 +64,21 @@ def str_cmp_prefix(qbytes, pool, off, pl) -> jax.Array:
     return jnp.sign(qd - kd) * any_neq
 
 
+def _cmp_tail(va, vb, lencmp) -> jax.Array:
+    """Shared strcmp tail: first differing byte decides, else the length
+    tie-break.  ONE copy of the ordering rule for every full-key compare
+    (`str_cmp_full`, `str_cmp_pools`) — the delta sort, the rank binary
+    searches and the scan merge must all agree on it, so it must not fork.
+    """
+    neq = va != vb
+    any_neq = neq.any(axis=1)
+    first = jnp.argmax(neq, axis=1)
+    ad = jnp.take_along_axis(va, first[:, None], axis=1)[:, 0]
+    bd = jnp.take_along_axis(vb, first[:, None], axis=1)[:, 0]
+    bytecmp = jnp.sign(ad - bd) * any_neq
+    return jnp.where(any_neq, bytecmp, lencmp)
+
+
 def str_cmp_full(qbytes, qlens, pool, off, klen) -> jax.Array:
     """Full strcmp sign; equal padded bytes resolve by length."""
     W = qbytes.shape[1]
@@ -71,14 +86,26 @@ def str_cmp_full(qbytes, qlens, pool, off, klen) -> jax.Array:
     mask = jnp.arange(W)[None, :] < klen[:, None]
     kv = jnp.where(mask, kb, 0).astype(jnp.int32)
     qv = qbytes.astype(jnp.int32)
-    neq = kv != qv
-    any_neq = neq.any(axis=1)
-    first = jnp.argmax(neq, axis=1)
-    qd = jnp.take_along_axis(qv, first[:, None], axis=1)[:, 0]
-    kd = jnp.take_along_axis(kv, first[:, None], axis=1)[:, 0]
-    bytecmp = jnp.sign(qd - kd) * any_neq
-    lencmp = jnp.sign(qlens - klen)
-    return jnp.where(any_neq, bytecmp, lencmp)
+    return _cmp_tail(qv, kv, jnp.sign(qlens - klen))
+
+
+def str_cmp_pools(pool_a, off_a, len_a, pool_b, off_b, len_b,
+                  width: int) -> jax.Array:
+    """sign(strcmp(a, b)) between entries of TWO flat byte pools.
+
+    Vectorized over (B,) offset/length vectors; both keys are gathered as
+    ``width``-byte windows, masked past their true lengths, and compared
+    byte-wise with a length tie-break — the same ordering rule as
+    :func:`str_cmp_full` (which compares a padded query row against one
+    pool).  Used by the delta-aware scan merge to order the live-delta
+    stream against the frozen-base stream (DESIGN.md §11).
+    """
+    ka = gather_bytes(pool_a, off_a, width)
+    kb = gather_bytes(pool_b, off_b, width)
+    cols = jnp.arange(width)[None, :]
+    va = jnp.where(cols < len_a[:, None], ka, 0).astype(jnp.int32)
+    vb = jnp.where(cols < len_b[:, None], kb, 0).astype(jnp.int32)
+    return _cmp_tail(va, vb, jnp.sign(len_a - len_b))
 
 
 def _fnv1a(qbytes, qlens) -> jax.Array:

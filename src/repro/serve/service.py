@@ -22,7 +22,11 @@ engine was built for:
   match the caller's prefix, and scan results are prefix-filtered and
   stripped before they leave the service.
 * **Streaming scans** — :meth:`scan_page` returns a page plus an opaque
-  resumption token; pages concatenate to exactly the one-shot scan.
+  resumption token; pages concatenate to exactly the one-shot scan.  Scans
+  are read-your-writes (DESIGN.md §11): a flushed put is visible to the
+  very next scan, a flushed delete never scans — no frozen-epoch caveat,
+  and cursors stay valid across background compactions (tokens carry a
+  resume KEY, not a rank, so an epoch bump mid-stream cannot skew them).
 * **Admission control** — a bounded queue; beyond ``max_queue`` pending
   ops, submissions resolve immediately to ``Status.OVERLOADED`` (data, not
   an exception — the facade's failure contract extends to overload).
@@ -415,6 +419,14 @@ class IndexService:
         is ignored when it is given).  ``cursor is None`` in the result means
         the tenant's key range is exhausted.  Page concatenation reproduces
         exactly the one-shot scan (tested in tests/test_index_service.py).
+
+        Pages read the LIVE index (read-your-writes, DESIGN.md §11):
+        unmerged delta inserts appear in order and deleted keys are
+        suppressed mid-stream.  Cursors embed the next KEY, not a rank or
+        an epoch, so a background ``compact()`` between pages — which
+        renames every entry id — cannot skip or duplicate entries;
+        resumption is exact across merge epoch bumps (tested in
+        tests/test_scan_consistency.py).
 
         Cursors are tenant-bound: the token embeds the tenant it was issued
         for, and a cursor presented by a different caller (the ``tenant``

@@ -75,6 +75,15 @@ facade_errors = int((f2 != found).sum()) + int((v2[found] != got_vals[found]).su
 res = dsi.execute([GetRequest(queries[1]), GetRequest(b"definitely-missing"),
                    PutRequest(b"x", 1)])
 facade_statuses = [r.status.name for r in res.results]
+# --- routed range scans: per-shard windows concatenate in shard order ---
+from repro.index import ScanRequest
+scan_starts = [keys[0], keys[len(keys) // 2], keys[-3], keys[-1] + b"~"]
+scan_errors = 0
+sres = dsi.execute([ScanRequest(s, 10) for s in scan_starts])
+for s, r in zip(scan_starts, sres.results):
+    expect = [(k, kv[k]) for k in keys if k >= s][:10]
+    if r.status.name != "OK" or list(r.entries) != expect:
+        scan_errors += 1
 print(json.dumps({
     "errors": int(errors),
     "n": Q,
@@ -83,6 +92,7 @@ print(json.dumps({
     "facade_errors": facade_errors,
     "facade_statuses": facade_statuses,
     "facade_first_ok": res.results[0].value == kv.get(queries[1]),
+    "scan_errors": scan_errors,
 }))
 """
 
@@ -102,3 +112,6 @@ def test_sharded_service_subprocess():
     assert rec["facade_errors"] == 0, rec
     assert rec["facade_statuses"] == ["OK", "NOT_FOUND", "UNSUPPORTED"], rec
     assert rec["facade_first_ok"] is True, rec
+    # routed scans: shard windows concatenated in shard order == the
+    # global sorted window (incl. cross-shard straddles and off-the-end)
+    assert rec["scan_errors"] == 0, rec

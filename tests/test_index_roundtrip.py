@@ -70,7 +70,7 @@ def test_scan_matches_sorted_order(rng):
     ti = freeze(b)
     starts = [keys[10], keys[100][:3], b"zzzz", b"a"]
     qb, ql = pad_queries(starts, ti.width)
-    eids, valid = scan_batch(ti, jnp.asarray(qb), jnp.asarray(ql), window=12)
+    eids, valid, _isd = scan_batch(ti, jnp.asarray(qb), jnp.asarray(ql), window=12)
     for i, s in enumerate(starts):
         expect = [k for k in keys if k >= s][:12]
         got = [b.key_at(int(e)) for e, ok in zip(np.asarray(eids)[i], np.asarray(valid)[i]) if ok]

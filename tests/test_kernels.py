@@ -218,14 +218,45 @@ def test_scan_backend_bit_identical(rng):
     starts = keys[::13] + [k[:2] for k in keys[:40]] + [b"~~~", b"a"]
     qb, ql = pad_queries(starts, ti.width)
     qb, ql = jnp.asarray(qb), jnp.asarray(ql)
-    e_j, v_j = scan_batch(ti, qb, ql, 11, backend="jnp")
-    e_p, v_p = scan_batch(ti, qb, ql, 11, backend="pallas")
+    e_j, v_j, d_j = scan_batch(ti, qb, ql, 11, backend="jnp")
+    e_p, v_p, d_p = scan_batch(ti, qb, ql, 11, backend="pallas")
     assert (np.asarray(e_j) == np.asarray(e_p)).all()
     assert (np.asarray(v_j) == np.asarray(v_p)).all()
+    assert (np.asarray(d_j) == np.asarray(d_p)).all()
+    assert not np.asarray(d_j).any()  # empty delta: pure frozen stream
     # oracle: first window of >= start in sorted order
     got0 = [b.key_at(int(e)) for e, ok in
             zip(np.asarray(e_j)[0], np.asarray(v_j)[0]) if ok]
     assert got0 == [k for k in keys if k >= starts[0]][:11]
+
+
+def test_scan_backend_bit_identical_with_live_delta(rng):
+    """The fused scan kernel merges the LIVE delta (inserts + tombstones)
+    bit-identically to the jnp reference (DESIGN.md §11)."""
+    from repro.core import delete_batch
+
+    keys = sorted(set(random_strings(rng, 500, 2, 20)))
+    b, ti = _build_index(keys, delta_capacity=256)
+    fresh = [b"dd-%03d" % i for i in range(60)] + \
+        [keys[7][:-1] + b"\x00", keys[11] + b"!"]
+    qb, ql = pad_queries(fresh, ti.width)
+    z = jnp.zeros(len(fresh), jnp.int32)
+    ti, ins, _ = insert_batch(ti, jnp.asarray(qb), jnp.asarray(ql), z + 3, z)
+    assert np.asarray(ins).all()
+    dead = keys[::9][:20] + fresh[::7][:5]          # base + delta tombstones
+    qb, ql = pad_queries(dead, ti.width)
+    ti, deleted, rej = delete_batch(ti, jnp.asarray(qb), jnp.asarray(ql))
+    assert np.asarray(deleted).all() and not np.asarray(rej).any()
+    starts = keys[::17] + fresh[::5] + dead[::3] + [b"", b"~~~", b"dd-"]
+    qb, ql = pad_queries(starts, ti.width)
+    qb, ql = jnp.asarray(qb), jnp.asarray(ql)
+    for w in (1, 7, 16):
+        e_j, v_j, d_j = scan_batch(ti, qb, ql, w, backend="jnp")
+        e_p, v_p, d_p = scan_batch(ti, qb, ql, w, backend="pallas")
+        assert (np.asarray(e_j) == np.asarray(e_p)).all()
+        assert (np.asarray(v_j) == np.asarray(v_p)).all()
+        assert (np.asarray(d_j) == np.asarray(d_p)).all()
+    assert np.asarray(d_j).any(), "delta entries must appear in the scan"
 
 
 def test_fused_levels_counter(rng):

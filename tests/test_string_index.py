@@ -60,9 +60,20 @@ def _legacy_plan(ti, batch, scan_window):
             np.asarray(lo).view(np.uint32).astype(np.int64)
     if scans:
         qb, ql = pad_queries([r.start for r in scans], ti.width)
-        eids, valid = scan_batch(ti, jnp.asarray(qb), jnp.asarray(ql), scan_window)
+        eids, valid, isd = scan_batch(ti, jnp.asarray(qb), jnp.asarray(ql),
+                                      scan_window)
         out["eids"], out["valid"] = np.asarray(eids), np.asarray(valid)
+        out["isd"] = np.asarray(isd)
     return ti, out
+
+
+def _any_key(ti, eid: int, is_delta: bool) -> bytes:
+    """Key bytes for a scan result id — base entry pool or delta byte pool."""
+    if not is_delta:
+        off, ln = int(ti.ent_off[eid]), int(ti.ent_len[eid])
+        return np.asarray(ti.key_bytes[off: off + ln]).tobytes()
+    off, ln = int(ti.de_off[eid]), int(ti.de_len[eid])
+    return np.asarray(ti.db_bytes[off: off + ln]).tobytes()
 
 
 @pytest.mark.parametrize("backend", ["jnp", "pallas"])
@@ -79,10 +90,11 @@ def test_execute_bit_identical_to_legacy(rng, backend):
         + [PutRequest(b"pp-%03d" % i, 7000 + i) for i in range(30)]
         + [PutRequest(keys[5], 99991), PutRequest(keys[6], 99992)]  # updates
         + [GetRequest(b"pp-007"), GetRequest(keys[5])]
-        + [ScanRequest(keys[0]), ScanRequest(keys[100][:3]), ScanRequest(b"~~~")]
+        + [ScanRequest(keys[0]), ScanRequest(keys[100][:3]), ScanRequest(b"~~~"),
+           ScanRequest(b"pp-")]  # straddles the batch's own fresh delta keys
     )
     res = index.execute(batch)
-    _, want = _legacy_plan(legacy.ti, batch, cfg.scan_window)
+    legacy_ti, want = _legacy_plan(legacy.ti, batch, cfg.scan_window)
 
     gets = [r for r, q in zip(res.results, batch) if isinstance(q, GetRequest)]
     assert [r.ok for r in gets] == want["found"].tolist()
@@ -92,11 +104,16 @@ def test_execute_bit_identical_to_legacy(rng, backend):
     assert [r.ok for r in puts] == (want["ins"] | want["upd"]).tolist()
     assert [r.updated for r in puts] == want["upd"].tolist()
     scans = [r for r, q in zip(res.results, batch) if isinstance(q, ScanRequest)]
+    saw_delta = False
     for row, r in enumerate(scans):
-        want_eids = [int(e) for e, ok in zip(want["eids"][row],
-                                             want["valid"][row]) if ok]
-        want_keys = [legacy._entry_key(e) for e in want_eids]
+        want_keys = [_any_key(legacy_ti, int(e), bool(d))
+                     for e, ok, d in zip(want["eids"][row], want["valid"][row],
+                                         want["isd"][row]) if ok]
+        saw_delta = saw_delta or bool(want["isd"][row][want["valid"][row]].any())
         assert [k for k, _ in r.entries] == want_keys
+    # the batch's own puts must be scannable (read-your-writes, §11): the
+    # "pp-" scan start window is seeded to hit the fresh delta keys
+    assert saw_delta, "scan windows should cover unmerged delta inserts"
 
 
 def test_per_op_error_statuses_not_exceptions(rng):
@@ -252,13 +269,16 @@ def test_delete_tombstone_semantics(rng, backend):
         DeleteRequest(b"never-existed"),  # absent -> NOT_FOUND
         GetRequest(keys[3]),             # delete visible in the same batch
         GetRequest(keys[4]),             # neighbour untouched
-        ScanRequest(keys[2], 4),         # frozen epoch: still scannable
+        ScanRequest(keys[2], 4),         # read-your-writes: already hidden
     ])
     assert res.results[0].status == Status.OK
     assert res.results[1].status == Status.NOT_FOUND
     assert res.results[2].status == Status.NOT_FOUND
     assert res.results[3].value == int(vals[4])
-    assert [k for k, _ in res.results[4].entries] == keys[2:6]
+    # §11: the tombstone suppresses keys[3] in the SAME batch's scan — the
+    # window slides past it to the next live key
+    assert [k for k, _ in res.results[4].entries] == \
+        [keys[2]] + keys[4:7]
     assert res.n_delete == 2
     # double delete: the key is already unpublished
     assert index.delete(keys[3]).status == Status.NOT_FOUND
